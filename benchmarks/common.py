@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: timing, CSV/markdown emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def timeit(fn, *args, repeat: int = 5, warmup: int = 1):
+    """Best-of-N walltime (paper §5.1 measures walltime after a barrier —
+    jax.block_until_ready is our barrier)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return min(times), out
+
+
+def emit(name: str, rows: list[dict], columns: list[str]):
+    """Print a markdown table and persist JSON."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n## {name}")
+    print("| " + " | ".join(columns) + " |")
+    print("|" + "|".join("---" for _ in columns) + "|")
+    for r in rows:
+        print("| " + " | ".join(_fmt(r.get(c)) for c in columns) + " |")
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,41 @@
+"""Paper Table 1: intra-node parallel speedup.
+
+The paper compares multi-threaded vs single-threaded runtimes per query
+(speedups 1.8–24x).  The TPU-era analogue of "use all cores of the node" is
+"run the compiled XLA data-parallel program instead of a scalar
+interpreter": we report jitted-plan runtime vs the numpy oracle (scalar
+reference semantics) on identical data — the same quantity the paper's
+Table 1 isolates (single-node parallel efficiency of the local operators),
+reported as oracle_ms / plan_ms."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.tpch.driver import TPCHDriver
+
+QUERIES = ["q1", "q2", "q3", "q3_lazy", "q4", "q5", "q11", "q13", "q14",
+           "q15", "q18", "q21", "q21_late"]
+
+
+def run(sf: float = 0.02, repeat: int = 3):
+    driver = TPCHDriver(sf=sf, seed=0)
+    cols = {n: t.columns for n, t in driver.placed.items()}
+    rows = []
+    for q in QUERIES:
+        fn = driver.compile(q)
+        plan_dt, _ = timeit(fn, cols, repeat=repeat)
+        base = q.split("_")[0]
+        oracle_dt, _ = timeit(lambda: driver.oracle(base), repeat=repeat,
+                              warmup=0)
+        rows.append({
+            "query": q,
+            "plan_ms": plan_dt * 1e3,
+            "oracle_ms": oracle_dt * 1e3,
+            "speedup": oracle_dt / plan_dt,
+        })
+    emit("table1_compiled_speedup", rows,
+         ["query", "plan_ms", "oracle_ms", "speedup"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

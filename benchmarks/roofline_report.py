@@ -1,0 +1,61 @@
+"""§Roofline reporter: reads the dry-run sweep JSONs (experiments/dryrun/)
+and renders the per-cell roofline table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def mitigation(r: dict, arch: str, shape: str) -> str:
+    dom = r["dominant"]
+    if dom == "compute":
+        return "raise useful-FLOP ratio (less remat / padding) or add chips"
+    if dom == "memory":
+        if "decode" in shape or "long" in shape:
+            return "shrink KV/state bytes: unpadded kv heads + int8 cache"
+        return "fuse attention (Pallas flash) to stop materializing scores"
+    return "overlap collectives with compute; shrink exchanged bytes (int8)"
+
+
+def run():
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        if f.endswith("summary.json"):
+            continue
+        cell = json.load(open(f))
+        if not cell.get("runnable"):
+            rows.append({"arch": cell["arch"], "shape": cell["shape"],
+                         "mesh": cell["mesh_desc"], "status": "SKIP",
+                         "note": cell["skip_reason"][:60]})
+            continue
+        if cell.get("error"):
+            rows.append({"arch": cell["arch"], "shape": cell["shape"],
+                         "mesh": cell["mesh_desc"], "status": "FAIL",
+                         "note": cell["error"][:60]})
+            continue
+        r = cell["roofline"]
+        rows.append({
+            "arch": cell["arch"], "shape": cell["shape"],
+            "mesh": cell["mesh_desc"], "status": "OK",
+            "compute_ms": r["compute_s"] * 1e3,
+            "memory_ms": r["memory_s"] * 1e3,
+            "collective_ms": r["collective_s"] * 1e3,
+            "dominant": r["dominant"],
+            "useful_flops": r["useful_flops_ratio"],
+            "roofline_frac": r["roofline_fraction"],
+            "note": mitigation(r, cell["arch"], cell["shape"]),
+        })
+    emit("roofline_table", rows,
+         ["arch", "shape", "mesh", "status", "compute_ms", "memory_ms",
+          "collective_ms", "dominant", "useful_flops", "roofline_frac",
+          "note"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

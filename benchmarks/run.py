@@ -1,0 +1,63 @@
+"""Benchmark harness entrypoint — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+| section                 | paper ref | module                      |
+|-------------------------|-----------|-----------------------------|
+| fig2_weak_scaling       | Fig. 2/3  | benchmarks.weak_scaling     |
+| fig4_q15_topk (+m sweep)| Fig. 4    | benchmarks.q15_topk         |
+| table1_compiled_speedup | Table 1   | benchmarks.compiled_speedup |
+| table2_power_test       | Table 2   | benchmarks.power_test       |
+| semijoin cost model     | §3.2.2    | benchmarks.semijoin_cost    |
+| roofline table          | (ours)    | benchmarks.roofline_report  |
+| sampling head ablation  | (ours)    | benchmarks.sampling_bench   |
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+# the paper's benchmarks are DISTRIBUTED (weak scaling, collective
+# schedules): give the bench process an 8-node host cluster — deliberately
+# not the dry-run's 512 placeholder devices (launch/dryrun.py only).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="smaller SFs / fewer repeats")
+    p.add_argument("--sections", nargs="*", default=None)
+    args = p.parse_args(argv)
+
+    from benchmarks import (compiled_speedup, power_test, q15_topk,
+                            roofline_report, sampling_bench, semijoin_cost,
+                            weak_scaling)
+
+    sections = {
+        "weak_scaling": lambda: weak_scaling.run(repeat=2 if args.quick else 3),
+        "q15_topk": lambda: (q15_topk.run(sf=0.01 if args.quick else 0.02),
+                             q15_topk.sweep_m(sf=0.01 if args.quick else 0.02)),
+        "compiled_speedup": lambda: compiled_speedup.run(
+            sf=0.01 if args.quick else 0.02),
+        "power_test": lambda: power_test.run(sf=0.02 if args.quick else 0.05),
+        "semijoin_cost": semijoin_cost.run,
+        "sampling": lambda: sampling_bench.run(),
+        "roofline": roofline_report.run,
+    }
+    todo = args.sections or list(sections)
+    t0 = time.monotonic()
+    for name in todo:
+        print(f"\n{'='*70}\n== {name}\n{'='*70}")
+        try:
+            sections[name]()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"SECTION FAILED: {name}: {type(e).__name__}: {e}")
+    print(f"\ntotal {time.monotonic()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+"""Beyond-paper benchmark: the §3.2.3 merging-reduction decode head vs the
+naive allgather head, over the assigned archs' vocab sizes — runtime on the
+host mesh plus the HLO collective bytes both schedules ship."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, timeit
+from repro.launch.roofline import parse_collective_bytes
+from repro.serve.sampling import naive_allgather_argmax, topk_logits
+
+VOCABS = {
+    "yi-34b": 64000, "qwen2.5-3b": 151936, "paligemma-3b": 257216,
+    "recurrentgemma-2b": 256000,
+}
+
+
+def run(batch: int = 8, k: int = 8):
+    mesh = jax.make_mesh((len(jax.devices()),), ("model",))
+    tp = mesh.shape["model"]
+    rows = []
+    for arch, vocab in VOCABS.items():
+        V = (vocab + tp - 1) // tp * tp
+        logits = jnp.asarray(
+            np.random.default_rng(0).normal(size=(batch, V)).astype(np.float32))
+
+        def topk_head(x):
+            return topk_logits(x, k, axis="model")[1][:, 0]
+
+        def naive_head(x):
+            return naive_allgather_argmax(x, axis="model")
+
+        out = {}
+        for name, head in [("topk_reduce", topk_head), ("allgather", naive_head)]:
+            jitted = jax.jit(jax.shard_map(
+                head, mesh=mesh, in_specs=P(None, "model"), out_specs=P(None),
+                check_vma=False))
+            dt, _ = timeit(jitted, logits, repeat=5)
+            coll = parse_collective_bytes(jitted.lower(logits).compile().as_text())
+            out[name] = (dt, coll.total_bytes)
+        agree = bool(jnp.array_equal(
+            jax.jit(jax.shard_map(topk_head, mesh=mesh, in_specs=P(None, "model"),
+                                  out_specs=P(None), check_vma=False))(logits),
+            jax.jit(jax.shard_map(naive_head, mesh=mesh, in_specs=P(None, "model"),
+                                  out_specs=P(None), check_vma=False))(logits)))
+        rows.append({
+            "arch": arch, "vocab": vocab,
+            "topk_ms": out["topk_reduce"][0] * 1e3,
+            "allgather_ms": out["allgather"][0] * 1e3,
+            "topk_bytes": out["topk_reduce"][1],
+            "allgather_bytes": out["allgather"][1],
+            "bytes_reduction_x": out["allgather"][1] / max(out["topk_reduce"][1], 1),
+            "agree": agree,
+        })
+    emit("sampling_head", rows,
+         ["arch", "vocab", "topk_ms", "allgather_ms", "topk_bytes",
+          "allgather_bytes", "bytes_reduction_x", "agree"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

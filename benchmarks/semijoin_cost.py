@@ -1,0 +1,71 @@
+"""Paper §3.2.2 cost model: Alt-1 (request) vs Alt-2 (bitset) — the analytic
+bits-per-node curves and the MEASURED collective bytes of both plans on the
+same data, verifying that the model picks the cheaper side."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit
+from repro.core import Cluster, semijoin
+from repro.core.partitioning import RangePartitioning
+from repro.launch.roofline import parse_collective_bytes
+
+
+def run():
+    rows = []
+    # analytic sweep (paper's model, SF-shaped numbers)
+    m = 1_000_000
+    for Pn in (16, 128, 512):
+        for n in (1_000, 100_000, 10_000_000):
+            for gamma in (1e-4, 0.01, 0.3):
+                rows.append({
+                    "P": Pn, "n_requests": n, "gamma": gamma,
+                    "alt1_bits": semijoin.alt1_bits(n, m, Pn),
+                    "alt2_bits": semijoin.alt2_bits(m, gamma),
+                    "choice": semijoin.choose_alternative(n, m, gamma, Pn),
+                })
+    emit("semijoin_cost_model", rows,
+         ["P", "n_requests", "gamma", "alt1_bits", "alt2_bits", "choice"])
+
+    # measured collective bytes of both alternatives on one dataset
+    cluster = Cluster()
+    Pn = cluster.num_nodes
+    rowsm = []
+    total = Pn * 4096
+    part = RangePartitioning(total, Pn)
+    rng = np.random.default_rng(0)
+    attr = jnp.asarray((rng.random(total) < 0.1).astype(np.int32))
+    keys = jnp.asarray(rng.integers(0, total, Pn * 512).astype(np.int32))
+    mask = jnp.asarray(rng.random(Pn * 512) < 0.5)
+
+    def alt1(k, mk, a):
+        def pred(idx, m_):
+            return (a[idx] == 1) & m_
+        bits, _ = semijoin.alt1_request(k, mk, part, pred, capacity=512,
+                                        axis="nodes")
+        return bits
+
+    def alt2(k, mk, a):
+        words = semijoin.alt2_bitset(a == 1, axis="nodes")
+        return semijoin.probe(words, k, part) & mk
+
+    for name, fn in [("alt1_request", alt1), ("alt2_bitset", alt2)]:
+        lowered = jax.jit(jax.shard_map(
+            fn, mesh=cluster.mesh,
+            in_specs=(P("nodes"), P("nodes"), P("nodes")),
+            out_specs=P("nodes"), check_vma=False,
+        )).lower(keys, mask, attr)
+        coll = parse_collective_bytes(lowered.compile().as_text())
+        rowsm.append({"alternative": name,
+                      "collective_bytes_per_node": coll.total_bytes,
+                      "ops": dict(coll.count_by_op)})
+    emit("semijoin_measured_bytes", rowsm,
+         ["alternative", "collective_bytes_per_node", "ops"])
+    return rows, rowsm
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper Fig. 2 + Fig. 3: weak-scaling runtimes and communication share.
+
+The paper runs {2^i nodes, SF 100*2^i}; this CPU container weak-scales the
+same way at reduced absolute size: {P nodes, SF base*P} for P in {1, 2, 4, 8}
+host devices, per query.  Communication share is derived from the lowered
+HLO's collective bytes (launch/roofline.py) — the walltime of a CPU
+collective is not meaningful for the paper's InfiniBand story, but the
+BYTES exchanged per node scale exactly like the paper's Fig. 3.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core import Cluster
+from repro.core.plans import PLANS
+from repro.launch.roofline import parse_collective_bytes
+from repro.tpch.driver import TPCHDriver
+
+QUERIES = ["q1", "q2", "q3", "q3_lazy", "q3_repl", "q4", "q5", "q11", "q13",
+           "q14", "q15", "q18", "q21", "q21_late"]
+BASE_SF = 0.004
+
+
+def run(repeat: int = 3):
+    devices = jax.devices()
+    rows = []
+    sizes = [p for p in (1, 2, 4, 8) if p <= len(devices)]
+    for P in sizes:
+        cluster = Cluster(devices=devices[:P])
+        driver = TPCHDriver(sf=BASE_SF * P, cluster=cluster, seed=0)
+        cols = {n: t.columns for n, t in driver.placed.items()}
+        for q in QUERIES:
+            fn = driver.compile(q)
+            dt, _ = timeit(fn, cols, repeat=repeat)
+            lowered = jax.jit(
+                jax.shard_map(
+                    lambda c, _plan=PLANS[q], _ctx=driver.ctx: _plan(_ctx, c),
+                    mesh=cluster.mesh,
+                    in_specs=(_in_specs(driver),),
+                    out_specs=jax.sharding.PartitionSpec(),
+                    check_vma=False,
+                )
+            ).lower(cols)
+            coll = parse_collective_bytes(lowered.compile().as_text())
+            rows.append({
+                "nodes": P, "sf": BASE_SF * P, "query": q,
+                "runtime_ms": dt * 1e3,
+                "collective_bytes_per_node": coll.total_bytes,
+                "collective_ops": sum(coll.count_by_op.values()),
+            })
+    emit("fig2_weak_scaling", rows,
+         ["nodes", "sf", "query", "runtime_ms",
+          "collective_bytes_per_node", "collective_ops"])
+    return rows
+
+
+def _in_specs(driver):
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        name: {c: (P() if t.replicated else P("nodes")) for c in t.columns}
+        for name, t in driver.placed.items()
+    }
+
+
+if __name__ == "__main__":
+    run()

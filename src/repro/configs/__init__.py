@@ -1,0 +1,1 @@
+from repro.configs.registry import ARCHS, SHAPES, get_arch, runnable_cells  # noqa: F401

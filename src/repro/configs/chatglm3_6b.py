@@ -1,0 +1,19 @@
+"""chatglm3-6b [dense]: 28L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=65024 — partial ('2d') RoPE over half the head dim, GQA
+[arXiv:2406.12793; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b", family="dense",
+    n_layers=28, d_model=4096, n_heads=32, n_kv_heads=2,
+    d_ff=13696, vocab_size=65024,
+    norm="rmsnorm", act="swiglu", rope_fraction=0.5, qkv_bias=True,
+)
+
+SMOKE = ModelConfig(
+    name="chatglm3-6b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=96, vocab_size=256,
+    norm="rmsnorm", act="swiglu", rope_fraction=0.5, qkv_bias=True,
+    compute_dtype="float32",
+)

@@ -1,0 +1,17 @@
+"""mistral-nemo-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072 — 128k context [hf:mistralai/Mistral-Nemo-Base-2407; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=131072, head_dim=128,
+    norm="rmsnorm", act="swiglu", rope_theta=1_000_000.0, max_seq=131072,
+)
+
+SMOKE = ModelConfig(
+    name="mistral-nemo-12b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=96, vocab_size=256, head_dim=16,
+    norm="rmsnorm", act="swiglu", compute_dtype="float32",
+)

@@ -1,0 +1,70 @@
+"""Architecture + input-shape registry: the 10 assigned archs x 4 shapes
+(40 cells), with per-cell runnability rules from the brief:
+
+- ``decode_*``/``long_*`` lower the SERVE step (one token + cache), not train.
+- ``long_500k`` requires sub-quadratic decode state -> runs only for
+  mamba2-2.7b (SSD) and recurrentgemma-2b (RG-LRU + bounded window); the 8
+  pure full-attention archs skip it (recorded, see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+_MODULES = {
+    "yi-34b": "repro.configs.yi_34b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe_42b_a6_6b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_arch(name: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cell_runnable(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for one (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention KV state at 524288 tokens is not "
+                       "sub-quadratic; skipped per brief (DESIGN.md §5)")
+    return True, ""
+
+
+def runnable_cells():
+    """All (arch, shape) pairs with runnability verdicts — 40 cells."""
+    out = []
+    for a in ARCHS:
+        cfg = get_arch(a)
+        for s in SHAPES.values():
+            ok, why = cell_runnable(cfg, s)
+            out.append((a, s.name, ok, why))
+    return out

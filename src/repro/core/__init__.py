@@ -1,0 +1,21 @@
+"""The paper's primary contribution: communication-efficient distributed
+OLAP query execution (Hespe/Weidner/Dees/Sanders), as a composable JAX
+library.  See DESIGN.md for the paper->TPU mapping.
+
+Submodules:
+  columnar      sharded main-memory column store
+  partitioning  range + co-partitioning (§3.1)
+  exchange      collectives incl. 1-factor all-to-all (§3.2.6), request/reply
+  compression   delta + bit packing, §3.2.2 cost model (§3.2.1)
+  semijoin      remote-attribute filters Alt-1 / Alt-2 (§3.2.2)
+  topk          merging-reduction & lazy filtered top-k (§3.2.3-4)
+  topk_approx   m-bit approximate distributed top-k (§3.2.5)
+  aggregation   one-hot MXU & dense grouped aggregation
+  late_materialization  output-only attribute fetch (§3.2.7)
+  engine        Cluster driver: plan -> shard_map -> jit
+  plans         the TPC-H query plans (one precompiled function per query)
+"""
+
+from repro.core.columnar import Table, shard_table, concat_tables  # noqa: F401
+from repro.core.engine import Cluster, PlanContext  # noqa: F401
+from repro.core.partitioning import RangePartitioning  # noqa: F401

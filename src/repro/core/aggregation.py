@@ -1,0 +1,67 @@
+"""Grouped aggregation (the paper's local-aggregation substrate, §4.3).
+
+Small-cardinality group-bys (Q1: 6 groups, Q4: 5 groups, Q5: 25 nations) are
+computed as *one-hot MXU contractions* — the TPU-native reformulation of the
+paper's scalar hash-table inner loop (DESIGN.md §3.2).  Large dense key
+spaces (revenue per supplier, orders per customer) use scatter-add into a
+dense vector, which is the column-store analogue of the paper's dense
+aggregation arrays.
+
+Distributed variants combine local aggregates with a collective reduce —
+the paper's "custom reduce operator merges the partial result sets".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def group_sum_onehot(values, group_ids, num_groups: int, mask=None):
+    """sum(values) per group via one-hot matmul: (G, n) @ (n, c) on the MXU.
+
+    values: (n,) or (n, c) — c aggregates share one pass.
+    Returns (G,) or (G, c) f32.
+    """
+    v = values if values.ndim == 2 else values[:, None]
+    v = v.astype(jnp.float32)
+    if mask is not None:
+        v = jnp.where(mask[:, None], v, 0.0)
+    onehot = (group_ids[None, :] == jnp.arange(num_groups, dtype=group_ids.dtype)[:, None])
+    out = jnp.dot(onehot.astype(jnp.float32), v, preferred_element_type=jnp.float32)
+    return out if values.ndim == 2 else out[:, 0]
+
+
+def group_count(group_ids, num_groups: int, mask=None):
+    ones = jnp.ones(group_ids.shape[0], jnp.float32)
+    return group_sum_onehot(ones, group_ids, num_groups, mask)
+
+
+def group_sum_dense(values, keys, num_keys: int, mask=None):
+    """Dense scatter-add aggregation for large key spaces: out[k] += v."""
+    v = values.astype(jnp.float32)
+    if mask is not None:
+        v = jnp.where(mask, v, 0.0)
+        keys = jnp.where(mask, keys, 0)
+    return jnp.zeros(num_keys, jnp.float32).at[keys].add(v)
+
+
+def group_count_dense(keys, num_keys: int, mask=None):
+    ones = jnp.ones(keys.shape[0], jnp.float32)
+    return group_sum_dense(ones, keys, num_keys, mask)
+
+
+def distributed_group_sum(values, group_ids, num_groups: int, mask=None, axis="nodes"):
+    """Local one-hot aggregation + allreduce (paper Q1/Q4 pattern)."""
+    return lax.psum(group_sum_onehot(values, group_ids, num_groups, mask), axis)
+
+
+def segment_run_bounds(sorted_keys):
+    """For each element of a sorted key array, the [start, end) bounds of its
+    run of equal keys — vectorized run-length probe used by Q21's EXISTS
+    logic (count of same-order / same-(order,supplier) lineitems)."""
+    n = sorted_keys.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    left = jnp.searchsorted(sorted_keys, sorted_keys, side="left").astype(jnp.int32)
+    right = jnp.searchsorted(sorted_keys, sorted_keys, side="right").astype(jnp.int32)
+    del idx
+    return left, right

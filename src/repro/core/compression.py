@@ -1,0 +1,148 @@
+"""Communication compression (paper §3.2.1).
+
+The paper compresses exchanged integer sets (keys, dictionary positions,
+sparse bitsets) with delta encoding + vectorized variable-length codes
+(FastPFor) and LZ4 for unsorted data.  On TPU we keep the paper's two cheap,
+branch-free building blocks and drop the exception path of PFor (replaced by
+a widened fixed width — the branchless variant):
+
+- ``delta_encode / delta_decode``: increasing key sequences -> small deltas.
+- ``pack_bits / unpack_bits``: fixed-width bit packing of non-negative ints
+  into uint32 words (the "frame" part of PFor).  Packed words are what the
+  exchange layer actually ships, so the byte reduction is visible in the
+  lowered HLO, not just in an analytic model.
+
+Also provides the paper's §3.2.2 analytic cost model for choosing between
+semi-join alternatives (information-theoretic bits communicated).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# delta coding for sorted key sets
+# ---------------------------------------------------------------------------
+
+
+def delta_encode(sorted_vals):
+    """First element kept, then differences.  Input must be non-decreasing
+    (the engine sorts key sets before shipping them, as the paper does for
+    better compression — §5.3 discusses exactly this trade-off)."""
+    first = sorted_vals[:1]
+    deltas = sorted_vals[1:] - sorted_vals[:-1]
+    return jnp.concatenate([first, deltas])
+
+
+def delta_decode(deltas):
+    return jnp.cumsum(deltas)
+
+
+# ---------------------------------------------------------------------------
+# fixed-width bit packing into uint32 words
+# ---------------------------------------------------------------------------
+
+
+def packed_words(n: int, width: int) -> int:
+    """Number of uint32 words needed for n values of `width` bits."""
+    return (n * width + 31) // 32
+
+
+def pack_bits(vals, width: int):
+    """Pack ``vals`` (non-negative int32/uint32, < 2**width) into uint32
+    words, little-endian bit order.  Values may straddle a word boundary;
+    both halves are deposited with disjoint-bit scatters (adds of disjoint
+    bits == or, which keeps this a pure vectorized gather/scatter — the
+    TPU-friendly reformulation of SIMD shuffles)."""
+    assert 1 <= width <= 32
+    n = vals.shape[0]
+    v = vals.astype(jnp.uint32) & jnp.uint32((1 << width) - 1 if width < 32 else 0xFFFFFFFF)
+    bitpos = jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(width)
+    word = (bitpos >> 5).astype(jnp.int32)
+    off = bitpos & jnp.uint32(31)
+    nwords = packed_words(n, width)
+    lo = (v << off).astype(jnp.uint32)
+    # high part: bits that spill into the next word; shift by (32 - off)
+    # guarded against off == 0 (shift by 32 is undefined) via two-step shift
+    hi = jnp.where(off > 0, (v >> (jnp.uint32(32) - jnp.where(off > 0, off, 1))), 0)
+    words = jnp.zeros(nwords, jnp.uint32)
+    words = words.at[word].add(lo)  # disjoint bits -> add == or
+    words = words.at[jnp.minimum(word + 1, nwords - 1)].add(
+        jnp.where(word + 1 < nwords, hi, 0)
+    )
+    return words
+
+
+def unpack_bits(words, n: int, width: int):
+    """Inverse of pack_bits; returns uint32 array of length n."""
+    assert 1 <= width <= 32
+    bitpos = jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(width)
+    word = (bitpos >> 5).astype(jnp.int32)
+    off = bitpos & jnp.uint32(31)
+    nwords = words.shape[0]
+    lo = words[word] >> off
+    nxt = words[jnp.minimum(word + 1, nwords - 1)]
+    hi = jnp.where(off > 0, nxt << (jnp.uint32(32) - jnp.where(off > 0, off, 1)), 0)
+    mask = jnp.uint32((1 << width) - 1 if width < 32 else 0xFFFFFFFF)
+    return (lo | hi) & mask
+
+
+def required_width(max_val: int) -> int:
+    """Smallest width that can represent max_val (host-side helper)."""
+    return max(1, int(max_val).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# packed bitsets (paper §3.2.2 Alt-2 ships compressed bitsets)
+# ---------------------------------------------------------------------------
+
+
+def pack_bitset(bits):
+    """bool[n] -> uint32[ceil(n/32)] (n must be a multiple of 32 for the
+    engine's fixed shapes; callers pad)."""
+    n = bits.shape[0]
+    assert n % 32 == 0, f"bitset length must be multiple of 32, got {n}"
+    b = bits.reshape(n // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, :]
+    return jnp.sum(b * weights, axis=1, dtype=jnp.uint32)
+
+
+def unpack_bitset(words, n: int):
+    w = words[:, None]
+    bits = (w >> jnp.arange(32, dtype=jnp.uint32)[None, :]) & jnp.uint32(1)
+    return bits.reshape(-1)[:n].astype(bool)
+
+
+def probe_bitset(words, idx):
+    """Test bit ``idx`` of a packed bitset (vectorized)."""
+    word = words[idx >> 5]
+    return ((word >> (idx.astype(jnp.uint32) & jnp.uint32(31))) & jnp.uint32(1)).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# §3.2.2 analytic cost model (bits communicated per node)
+# ---------------------------------------------------------------------------
+
+
+def alt1_bits(n: float, m: float, P: int) -> float:
+    """Request-based semi-join: n requests after local filtering (n/P per
+    node), remote table of m rows: n/P * log2(m*P/n) bits per node."""
+    if n <= 0:
+        return 0.0
+    return (n / P) * float(np.log2(max(m * P / n, 2.0)))
+
+
+def alt2_bits(m: float, gamma: float) -> float:
+    """Replicated-bitset semi-join: γm qualifying rows of an m-row table:
+    γ·m·log2(1/γ) bits (information content of the bitset)."""
+    if gamma <= 0 or gamma >= 1:
+        return float(m) if 0 < gamma < 1 else (0.0 if gamma <= 0 else float(m))
+    return gamma * m * float(np.log2(1.0 / gamma))
+
+
+def choose_semijoin(n: float, m: float, gamma: float, P: int) -> int:
+    """Return 1 or 2 — the cheaper alternative under the paper's model.
+    (Footnote 2: for n/P > m Alternative 2 is better anyway.)"""
+    if n / P > m:
+        return 2
+    return 1 if alt1_bits(n, m, P) <= alt2_bits(m, gamma) else 2

@@ -1,0 +1,38 @@
+"""Late materialization of output-only attributes (paper §3.2.7).
+
+Result sets are human-readable (small k), so attributes that never feed the
+computation (s_name, s_address, s_phone in Q15) are fetched only for the
+final k rows.  With k replicated after the merging reduction, every owner
+contributes its owned rows and one allreduce (O(log P), same depth as the
+paper's scatter+gather pair) assembles the k x A attribute block.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.partitioning import RangePartitioning
+
+
+def materialize(
+    keys,
+    valid,
+    part: RangePartitioning,
+    local_columns,
+    *,
+    axis: str = "nodes",
+):
+    """Fetch attribute values for k replicated keys.
+
+    keys: (k,) global keys (replicated — e.g. a TopK result).
+    local_columns: dict name -> (rows_per_node,) local attribute shards.
+    Returns dict name -> (k,) materialized values (replicated).
+    """
+    mine = valid & (part.owner(keys) == lax.axis_index(axis))
+    local_idx = jnp.where(mine, part.local_index(keys), 0)
+    out = {}
+    for name, col in local_columns.items():
+        vals = col[local_idx]
+        contrib = jnp.where(mine, vals, jnp.zeros_like(vals))
+        out[name] = lax.psum(contrib, axis)
+    return out

@@ -1,0 +1,34 @@
+"""Precompiled TPC-H query plans (paper §4.3) — one function per query,
+plus the variants evaluated in the paper's Fig. 2/4 (lazy, repl, late,
+1-factor, approx)."""
+from __future__ import annotations
+
+from repro.core.plans.local import q1, q1_kernel, q4, q18
+from repro.core.plans.semijoin_plans import q2, q3, q3_lazy, q3_repl, q5, q11, q13, q14
+from repro.core.plans.distributed_topk import (
+    q15,
+    q15_1factor,
+    q15_approx,
+    q21,
+    q21_late,
+)
+
+PLANS = {
+    "q1": q1,
+    "q1_kernel": q1_kernel,
+    "q2": q2,
+    "q3": q3,
+    "q3_lazy": q3_lazy,
+    "q3_repl": q3_repl,
+    "q4": q4,
+    "q5": q5,
+    "q11": q11,
+    "q13": q13,
+    "q14": q14,
+    "q15": q15,
+    "q15_1factor": q15_1factor,
+    "q15_approx": q15_approx,
+    "q18": q18,
+    "q21": q21,
+    "q21_late": q21_late,
+}

@@ -1,0 +1,51 @@
+"""Shared plan helpers.
+
+A *plan* is the paper's hand-translated query function: it runs inside
+shard_map over the ``nodes`` axis, sees the local partition of every table,
+and synchronizes only through the exchange layer.  XLA compiles each plan to
+one SPMD executable (the paper's precompiled C++ function).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.engine import PlanContext
+from repro.tpch.schema import DEFAULT_PARAMS  # noqa: F401  (re-export)
+
+
+def local_index(ctx: PlanContext, table: str, global_keys):
+    """Global dense key -> local row index on the owner (co-partitioned
+    access: caller guarantees the keys are locally owned)."""
+    return global_keys - ctx.part(table).my_base(ctx.axis)
+
+
+def my_keys(ctx: PlanContext, table: str):
+    """Global keys of the local partition."""
+    return ctx.part(table).global_keys(ctx.axis)
+
+
+def revenue(li):
+    """extendedprice * (1 - discount) — the TPC-H revenue measure."""
+    return li["l_extendedprice"] * (1.0 - li["l_discount"])
+
+
+def dense_local_sum(ctx: PlanContext, table: str, keys_global, values, mask=None):
+    """Scatter-add values into a dense per-row vector of the LOCAL partition
+    of ``table`` (keys must be locally owned — co-partitioned group-by)."""
+    rows = ctx.part(table).rows_per_node
+    idx = local_index(ctx, table, keys_global)
+    v = values.astype(jnp.float32)
+    if mask is not None:
+        v = jnp.where(mask, v, 0.0)
+    return jnp.zeros(rows, jnp.float32).at[idx].add(v)
+
+
+def dense_partials(ctx: PlanContext, table: str, keys_global, values, mask=None):
+    """Scatter-add into a dense vector over the GLOBAL key space of ``table``
+    (partial aggregates for a remote group-by key — §3.2.5 input)."""
+    total = ctx.part(table).total_rows
+    v = values.astype(jnp.float32)
+    if mask is not None:
+        v = jnp.where(mask, v, 0.0)
+    return jnp.zeros(total, jnp.float32).at[keys_global].add(v)

@@ -1,0 +1,176 @@
+"""Queries aggregating on a NON-co-partitioned key (paper §4.3: Q15, Q21) —
+every node holds a partial aggregate for every key; the total requires an
+exchange.  Q15 is the paper's showcase for the §3.2.5 approximate top-k."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import aggregation, exchange, late_materialization, semijoin, topk
+from repro.core.topk_approx import approx_topk_distributed, simple_topk_distributed
+from repro.core.plans.common import (
+    DEFAULT_PARAMS as DP,
+    dense_partials,
+    local_index,
+    my_keys,
+    revenue,
+)
+
+
+# ---------------------------------------------------------------------------
+# Q15 — top supplier (three variants, paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def _q15_partials(ctx, t, p):
+    li = t["lineitem"]
+    sel = (li["l_shipdate"] >= p.q15_date_min) & (li["l_shipdate"] < p.q15_date_max)
+    return dense_partials(ctx, "supplier", li["l_suppkey"], revenue(li), sel)
+
+
+def _q15_materialize(ctx, t, winners):
+    sup = t["supplier"]
+    attrs = late_materialization.materialize(
+        winners.keys, winners.valid, ctx.part("supplier"),
+        {
+            "s_name_code": sup["s_name_code"],
+            "s_address_code": sup["s_address_code"],
+            "s_phone_code": sup["s_phone_code"],
+        },
+        axis=ctx.axis,
+    )
+    return {"total_revenue": winners.values, "s_suppkey": winners.keys,
+            "valid": winners.valid, **attrs}
+
+
+def q15(ctx, t, p=DP, k: int = 1):
+    """Variant 1 (paper): ship ALL partial sums to each key's owner with the
+    library all-to-all, aggregate, select the max."""
+    winners = simple_topk_distributed(_q15_partials(ctx, t, p), k,
+                                      axis=ctx.axis, backend="xla")
+    return _q15_materialize(ctx, t, winners)
+
+
+def q15_1factor(ctx, t, p=DP, k: int = 1):
+    """Variant 2 (paper): same, but the exchange uses the 1-factor schedule
+    (§3.2.6)."""
+    winners = simple_topk_distributed(_q15_partials(ctx, t, p), k,
+                                      axis=ctx.axis, backend="one_factor")
+    return _q15_materialize(ctx, t, winners)
+
+
+def _approx_group(ctx, requested: int) -> int:
+    """Largest power-of-two group <= requested that divides the per-node key
+    range (the paper's 1024, shrunk for tiny test tables)."""
+    kp = ctx.part("supplier").total_rows // ctx.num_nodes
+    g = 1
+    while g * 2 <= min(requested, kp) and kp % (g * 2) == 0:
+        g *= 2
+    return g
+
+
+def q15_approx(ctx, t, p=DP, k: int = 1, m: int = 8):
+    """Variant 3 (paper §3.2.5): ship m-bit approximations of every partial
+    sum; exact values only for the pruned candidate set (8x less traffic)."""
+    winners, stats, overflow = approx_topk_distributed(
+        _q15_partials(ctx, t, p), k, m=m,
+        group=_approx_group(ctx, ctx.cap("q15_group", 1024)),
+        candidate_capacity=ctx.cap("q15_candidates", 256),
+        axis=ctx.axis, backend=ctx.backend,
+    )
+    out = _q15_materialize(ctx, t, winners)
+    out["stats"] = stats
+    out["overflow"] = overflow
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Q21 — suppliers who kept orders waiting (two variants)
+# ---------------------------------------------------------------------------
+
+
+def _q21_qualify(ctx, t):
+    """Per-lineitem EXISTS / NOT EXISTS logic — local thanks to the
+    lineitem-orders co-partitioning.  'exists another supplier's lineitem in
+    this order' and 'no other supplier was late' are answered with sorted
+    composite keys + run-length probes (the column-store formulation of the
+    paper's per-order scan)."""
+    li = t["lineitem"]
+    o = t["orders"]
+    rows = ctx.part("orders").rows_per_node
+    num_sup = ctx.part("supplier").total_rows
+    l_order_local = local_index(ctx, "orders", li["l_orderkey"])
+    delayed = li["l_receiptdate"] > li["l_commitdate"]
+    cnt_lines = jnp.zeros(rows, jnp.int32).at[l_order_local].add(1)
+    cnt_delayed = jnp.zeros(rows, jnp.int32).at[l_order_local].add(delayed.astype(jnp.int32))
+    comp = l_order_local * num_sup + li["l_suppkey"]
+    sorted_comp = jnp.sort(comp)
+    same_lines = (
+        jnp.searchsorted(sorted_comp, comp, side="right")
+        - jnp.searchsorted(sorted_comp, comp, side="left")
+    ).astype(jnp.int32)
+    delayed_comp = jnp.where(delayed, comp, jnp.iinfo(jnp.int32).max)
+    sorted_delayed = jnp.sort(delayed_comp)
+    same_delayed = (
+        jnp.searchsorted(sorted_delayed, comp, side="right")
+        - jnp.searchsorted(sorted_delayed, comp, side="left")
+    ).astype(jnp.int32)
+    status_f = o["o_orderstatus"][l_order_local] == 0
+    return (
+        delayed
+        & status_f
+        & (cnt_lines[l_order_local] - same_lines > 0)
+        & (cnt_delayed[l_order_local] - same_delayed == 0)
+    )
+
+
+def _q21_finish(ctx, t, partials, k):
+    """Route dense per-supplier partial counts to their owners, aggregate,
+    global top-k by (numwait desc, suppkey asc)."""
+    P = ctx.num_nodes
+    NS = ctx.part("supplier").total_rows
+    recv = exchange.all_to_all(partials.reshape(P, NS // P), ctx.axis,
+                               backend=ctx.backend)
+    numwait = jnp.sum(recv, axis=0)
+    local = topk.local_topk(numwait, my_keys(ctx, "supplier"), k, numwait > 0)
+    return topk.topk_allreduce(local, ctx.axis)
+
+
+def q21(ctx, t, p=DP, k: int = 100):
+    """Version 1 (paper): the supplier-nation filter is evaluated up front
+    and replicated as a bitset (Alt-2); the group-by then counts only
+    qualified suppliers."""
+    li = t["lineitem"]
+    sup = t["supplier"]
+    qualify = _q21_qualify(ctx, t)
+    words = semijoin.alt2_bitset(sup["s_nationkey"] == p.q21_nation, axis=ctx.axis)
+    nation_ok = semijoin.probe(words, li["l_suppkey"], ctx.part("supplier"))
+    partials = dense_partials(ctx, "supplier", li["l_suppkey"],
+                              jnp.ones_like(li["l_suppkey"], jnp.float32),
+                              qualify & nation_ok)
+    return _q21_finish(ctx, t, partials, k)
+
+
+def q21_late(ctx, t, p=DP, k: int = 100):
+    """Version 2 (paper 'late'): aggregate WITHOUT the nation filter, then
+    request the filter bits (Alt-1) only for suppliers that actually hold a
+    delayed shipment."""
+    li = t["lineitem"]
+    sup = t["supplier"]
+    qualify = _q21_qualify(ctx, t)
+    partials = dense_partials(ctx, "supplier", li["l_suppkey"],
+                              jnp.ones_like(li["l_suppkey"], jnp.float32), qualify)
+    active = partials > 0
+    sup_part = ctx.part("supplier")
+    all_sup_keys = jnp.arange(sup_part.total_rows, dtype=jnp.int32)
+
+    def nation_pred(local_idx, mask):
+        return (sup["s_nationkey"][local_idx] == p.q21_nation) & mask
+
+    bits, ovf = semijoin.alt1_request(
+        all_sup_keys, active, sup_part, nation_pred,
+        capacity=ctx.cap("q21_request", 1024), axis=ctx.axis, backend=ctx.backend,
+    )
+    partials = jnp.where(bits, partials, 0.0)
+    winners = _q21_finish(ctx, t, partials, k)
+    return winners, ovf

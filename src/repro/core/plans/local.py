@@ -1,0 +1,118 @@
+"""Queries whose joins are fully local thanks to co-partitioning (paper
+§4.3: Q1, Q4, Q18) — local aggregation + one collective reduce; constant
+weak-scaling runtime in the paper's Fig. 2."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import aggregation, late_materialization, topk
+from repro.core.plans.common import (
+    DEFAULT_PARAMS as DP,
+    dense_local_sum,
+    local_index,
+    my_keys,
+    revenue,
+)
+
+
+def q1(ctx, t, p=DP):
+    """Pricing summary report: 6-group aggregate over lineitem, merged with a
+    collective reduction (custom reduce op in the paper = psum of the dense
+    6x6 partial result here)."""
+    li = t["lineitem"]
+    sel = li["l_shipdate"] <= p.q1_shipdate_max
+    group = li["l_returnflag"] * 2 + li["l_linestatus"]
+    disc_price = revenue(li)
+    charge = disc_price * (1.0 + li["l_tax"])
+    measures = jnp.stack(
+        [
+            li["l_quantity"],
+            li["l_extendedprice"],
+            disc_price,
+            charge,
+            li["l_discount"],
+            jnp.ones_like(disc_price),
+        ],
+        axis=1,
+    )
+    local = aggregation.group_sum_onehot(measures, group, 6, sel)
+    return lax.psum(local, ctx.axis)
+
+
+def q1_kernel(ctx, t, p=DP):
+    """Q1 with the fused filter+aggregate Pallas kernel (repro.kernels.
+    grouped_agg) as the local scan — the TPU-native hot loop."""
+    from repro.kernels import ops
+
+    li = t["lineitem"]
+    disc_price = revenue(li)
+    charge = disc_price * (1.0 + li["l_tax"])
+    measures = jnp.stack(
+        [
+            li["l_quantity"],
+            li["l_extendedprice"],
+            disc_price,
+            charge,
+            li["l_discount"],
+            jnp.ones_like(disc_price),
+        ],
+        axis=1,
+    )
+    group = li["l_returnflag"] * 2 + li["l_linestatus"]
+    local = ops.filtered_group_sum(
+        measures, group, li["l_shipdate"],
+        cutoff=int(p.q1_shipdate_max), num_groups=6,
+    )
+    return lax.psum(local, ctx.axis)
+
+
+def q4(ctx, t, p=DP):
+    """Order priority checking: per-priority count of orders (date-filtered)
+    having a late lineitem.  lineitem-orders are co-partitioned, so the
+    EXISTS probe is a local scatter; one psum merges the 5 counters."""
+    o = t["orders"]
+    li = t["lineitem"]
+    o_ok = (o["o_orderdate"] >= p.q4_date_min) & (o["o_orderdate"] < p.q4_date_max)
+    late = li["l_commitdate"] < li["l_receiptdate"]
+    rows = ctx.part("orders").rows_per_node
+    has_late = jnp.zeros(rows, bool).at[local_index(ctx, "orders", li["l_orderkey"])].max(late)
+    counts = aggregation.group_count(o["o_orderpriority"], 5, o_ok & has_late)
+    return lax.psum(counts, ctx.axis)
+
+
+def q18(ctx, t, p=DP, k: int = 100):
+    """Large volume customers: local group-by (co-partitioned), local top-k,
+    merging reduction (§3.2.3), then late materialization (§3.2.7) of the
+    output-only attributes (c_name via remote fetch, order columns local)."""
+    o = t["orders"]
+    li = t["lineitem"]
+    qty = dense_local_sum(ctx, "orders", li["l_orderkey"], li["l_quantity"])
+    sel = qty > p.q18_quantity
+    local = topk.local_topk(o["o_totalprice"], my_keys(ctx, "orders"), k, sel)
+    winners = topk.topk_allreduce(local, ctx.axis)
+    # late materialization: order-side attributes from order owners…
+    order_attrs = late_materialization.materialize(
+        winners.keys,
+        winners.valid,
+        ctx.part("orders"),
+        {"o_custkey": o["o_custkey"], "o_orderdate": o["o_orderdate"], "sum_qty": qty},
+        axis=ctx.axis,
+    )
+    # …then customer names from customer owners (the remote join path)
+    cust_attrs = late_materialization.materialize(
+        order_attrs["o_custkey"],
+        winners.valid,
+        ctx.part("customer"),
+        {"c_name_code": t["customer"]["c_name_code"]},
+        axis=ctx.axis,
+    )
+    return {
+        "o_totalprice": winners.values,
+        "o_orderkey": winners.keys,
+        "valid": winners.valid,
+        "o_custkey": order_attrs["o_custkey"],
+        "o_orderdate": order_attrs["o_orderdate"],
+        "sum_qty": order_attrs["sum_qty"],
+        "c_name_code": cust_attrs["c_name_code"],
+    }

@@ -1,0 +1,89 @@
+"""Remote-attribute filters / semi-joins (paper §3.2.2).
+
+A query's WHERE clause references an attribute of a remote relation
+("x.nation = :n" with x on another node).  Two alternatives:
+
+Alt-1 (request): after all local filtering, ship the still-needed keys to
+their owners; owners answer one bit per key.  ~n/P·log2(mP/n) bits per node.
+
+Alt-2 (bitset): owners evaluate the predicate over their whole partition and
+allgather the resulting bitset (packed, so the volume is visible in HLO);
+every node then probes locally.  ~γm·log2(1/γ) bits.
+
+``choose_alternative`` applies the paper's cost model; the plans pin the
+choice the paper made per query and the benchmark sweeps both.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compression, exchange
+from repro.core.partitioning import RangePartitioning
+
+
+def alt1_request(
+    keys,
+    mask,
+    part: RangePartitioning,
+    local_predicate: Callable,
+    *,
+    capacity: int,
+    axis: str = "nodes",
+    backend: str = "xla",
+):
+    """Request-based semi-join: returns (bits aligned with keys, overflow).
+
+    ``local_predicate(local_indices, mask) -> bool bits`` evaluates the
+    remote predicate on the OWNER's partition, given local row indices.
+    """
+    def lookup(req_keys, req_mask):
+        local_idx = part.local_index(req_keys)
+        return local_predicate(local_idx, req_mask)
+
+    bits, overflow = exchange.request_reply(
+        keys,
+        mask,
+        part.owner(keys),
+        lookup,
+        capacity=capacity,
+        axis=axis,
+        backend=backend,
+        reply_dtype=jnp.bool_,
+    )
+    return bits & mask, overflow
+
+
+def alt2_bitset(
+    local_bits,
+    *,
+    axis: str = "nodes",
+):
+    """Bitset-replication semi-join: every node contributes the predicate
+    bits of its own partition; the packed bitset is allgathered so any node
+    can probe any key locally.  Returns packed uint32 words covering the
+    GLOBAL key space (row-major by node)."""
+    n = local_bits.shape[0]
+    pad = (-n) % 32
+    if pad:
+        local_bits = jnp.concatenate([local_bits, jnp.zeros(pad, bool)])
+    packed = compression.pack_bitset(local_bits)
+    return lax.all_gather(packed, axis, tiled=True)
+
+
+def probe(global_bitset_words, keys, part: RangePartitioning):
+    """Probe the replicated bitset for arbitrary global keys."""
+    rows = part.rows_per_node
+    padded = rows + ((-rows) % 32)
+    owner = part.owner(keys)
+    local = part.local_index(keys)
+    bit_index = owner * padded + local
+    return compression.probe_bitset(global_bitset_words, bit_index)
+
+
+# re-export the paper's cost model
+alt1_bits = compression.alt1_bits
+alt2_bits = compression.alt2_bits
+choose_alternative = compression.choose_semijoin

@@ -1,0 +1,81 @@
+"""Deterministic sharded data pipeline.
+
+Same contract as tpch/dbgen (and the paper's `dbgen -S rank -C P`): shard i
+of step t is a pure function of (seed, t, i) — no central dispatcher, no
+shared filesystem, which is both the straggler-mitigation story (any node
+can regenerate any shard) and the elastic-restart story (a different mesh
+re-derives its shards from the same seed).
+
+Token streams are Zipf-ish synthetic text: a mixture of a per-sequence
+topic distribution and a global unigram distribution, giving non-trivial
+(learnable) statistics for the convergence examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    num_topics: int = 64
+
+    def host_batch(self, step: int, shard: int = 0, num_shards: int = 1):
+        """Numpy batch for shard `shard` of `num_shards` (host-side)."""
+        b = self.global_batch // num_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard])
+        )
+        # zipf-ish unigram over vocab, shifted per topic
+        topics = rng.integers(0, self.num_topics, b)
+        ranks = np.arange(1, self.vocab_size + 1)
+        base = 1.0 / ranks
+        base /= base.sum()
+        tokens = np.empty((b, self.seq_len + 1), np.int32)
+        for i in range(b):
+            shift = (topics[i] * 97) % self.vocab_size
+            p = np.roll(base, shift)
+            tokens[i] = rng.choice(self.vocab_size, self.seq_len + 1, p=p)
+        return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+    def device_batch(self, step, *, key=None):
+        """Fast on-device batch for the training examples: the same
+        (seed, step)-determinism, drawn with jax PRNG (no host loop)."""
+        key = key if key is not None else jax.random.key(self.seed)
+        k = jax.random.fold_in(key, step)
+        shape = (self.global_batch, self.seq_len + 1)
+        # truncated-zipf via inverse-cdf on uniform
+        u = jax.random.uniform(k, shape, jnp.float32, 1e-6, 1.0)
+        zipf = jnp.clip(
+            (jnp.exp(-jnp.log(u) * 0.35) - 1.0).astype(jnp.int32),
+            0, self.vocab_size - 1,
+        )
+        return {"tokens": zipf[:, :-1], "labels": zipf[:, 1:]}
+
+
+def batch_specs(arch_cfg, shape, mesh=None):
+    """ShapeDtypeStructs for one global batch of a given (arch, shape) cell —
+    what the dry-run feeds to jit().lower() (never allocated)."""
+    import jax
+
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if arch_cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, arch_cfg.encdec.enc_seq, arch_cfg.d_model), jnp.bfloat16
+        )
+    if arch_cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, arch_cfg.vlm.num_patches, arch_cfg.vlm.patch_dim), jnp.bfloat16
+        )
+    return specs

@@ -1,0 +1,56 @@
+"""Predicate -> packed bitset Pallas kernel (TPU) — §3.2.2 Alternative 2.
+
+Building the semi-join bitset is a full scan of the filter column; shipping
+it is an allgather of the PACKED words.  The kernel fuses predicate
+evaluation (equality against a dictionary code) with 32-way lane packing:
+a (BN/32, 32) view of the block is contracted against the bit-weight vector
+(1<<lane) — one VPU multiply-add per row, no gathers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8192  # rows per step; must be a multiple of 32
+
+
+def _kernel(col_ref, out_ref, *, value):
+    col = col_ref[...]                       # (1, BN) i32
+    bn = col.shape[1]
+    bits = (col == value).astype(jnp.uint32).reshape(bn // 32, 32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(jnp.uint32, (1, 32), 1))
+    out_ref[...] = jnp.sum(bits * weights, axis=1, dtype=jnp.uint32)[None, :]
+
+
+def predicate_bitset(
+    column,
+    value: int,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """Packed bitset of (column == value).
+
+    column: (N,) i32 dictionary codes, N padded to a multiple of 32 by the
+    caller-visible wrapper.  Returns (ceil(N/32),) uint32.
+    """
+    assert block % 32 == 0
+    n = column.shape[0]
+    pad = (-n) % block
+    if pad:
+        column = jnp.pad(column, (0, pad), constant_values=value - 1)
+    n_pad = n + pad
+    grid = (n_pad // block,)
+    kernel = functools.partial(_kernel, value=value)
+    words = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block // 32), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad // 32), jnp.uint32),
+        interpret=interpret,
+    )(column[None, :])
+    return words[0, : (n + 31) // 32]

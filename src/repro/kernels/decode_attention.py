@@ -1,0 +1,116 @@
+"""Single-token decode attention Pallas kernel (TPU), with optional int8
+KV cache dequantized in-kernel — §Perf optimization for the decode cells.
+
+Decode is memory-bound by the cache read (§Roofline): the win is (a) never
+materializing the (B, H, Smax) score row to HBM and (b) reading the cache at
+1 byte/elem (int8 + per-position scales) instead of 2 — the dequant runs on
+the VPU between the cache load and the MXU dot, so HBM sees only int8.
+
+Layout: grouped like the flash kernel — q (B*KV, G, D) one token per
+sequence; caches (B*KV, Smax, D) [+ scales (B*KV, Smax)].  Grid
+(B*KV, nS): online softmax across cache blocks in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+DEFAULT_BS = 1024
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, bs, ns, quant):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    k_start = si * bs
+
+    @pl.when(k_start < length)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale      # (G, D)
+        k = k_ref[0].astype(jnp.float32)              # (bs, D)
+        v = v_ref[0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0][:, None]
+            v = v * vs_ref[0][:, None]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, bs)
+        pos = k_start + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(m_prev - m_new)
+        corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, corr)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _fin():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, k_scale=None,
+                     v_scale=None, bs: int = DEFAULT_BS,
+                     interpret: bool = False):
+    """q: (BKV, G, D); caches (BKV, Smax, D) bf16 or int8 (+ (BKV, Smax)
+    f32 scales); length: scalar int32.  Returns (BKV, G, D)."""
+    BKV, G, D = q.shape
+    Smax = k_cache.shape[1]
+    bs = min(bs, Smax)
+    while Smax % bs:
+        bs -= 1
+    ns = Smax // bs
+    quant = k_scale is not None
+    scale = 1.0 / np.sqrt(D)
+    if not quant:
+        k_scale = jnp.ones((BKV, Smax), jnp.float32)
+        v_scale = jnp.ones((BKV, Smax), jnp.float32)
+    itemsize = jnp.dtype(k_cache.dtype).itemsize
+    cost = pl.CostEstimate(
+        flops=4 * BKV * G * Smax * D,
+        bytes_accessed=(BKV * G * D * 4 * 2
+                        + BKV * Smax * D * 2 * itemsize
+                        + (BKV * Smax * 4 * 2 if quant else 0)),
+        transcendentals=BKV * G * Smax,
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bs=bs, ns=ns, quant=quant),
+        grid=(BKV, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bs), lambda b, j: (b, j)),
+            pl.BlockSpec((1, bs), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        cost_estimate=cost,
+        name=f"decode_attn_quant{int(quant)}",
+        interpret=interpret,
+    )(jnp.reshape(length, (1, 1)).astype(jnp.int32), q, k_cache, v_cache,
+      k_scale, v_scale)
+    return out

@@ -1,0 +1,188 @@
+"""Flash attention Pallas kernel (TPU) — §Perf beyond-paper optimization.
+
+The roofline analysis (EXPERIMENTS.md §Roofline) shows every train/prefill
+cell memory-bound, dominated by the (cq x ck) f32 score tiles the XLA
+chunked-attention baseline materializes to HBM.  This kernel keeps the
+online-softmax state (m, l, acc) in VMEM scratch across the key-block grid
+dimension, so HBM traffic is exactly q + k + v + out — the flash-attention
+property.
+
+Layout: GQA-grouped.  Inputs are reshaped to
+    q: (B*KV, G, S, D)   k, v: (B*KV, S, D)
+and the grid is (B*KV, nq, nk) — the LAST dim is sequential on TPU, so the
+scratch accumulators carry across key blocks of one (batch-kv-head, q-block)
+pair.  The score tile is (G*bq, bk): G query heads of one kv head share the
+kv block (G*bq rows keep the MXU fed even for MQA).
+
+Causal masking skips whole key blocks above the diagonal with pl.when
+(predicated-off on TPU, near-zero cost); windows/prefixes mask in-tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, prefix, bq, bk, nk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level causal skip: key block strictly above the diagonal
+    # contributes nothing (unless a bidirectional prefix reaches into it)
+    run = True
+    if causal:
+        run = (k_start <= q_start + bq - 1) | (k_start < prefix)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (G, bq, D)
+        G, _, D = q.shape
+        k = k_ref[0].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        qf = q.reshape(G * bq, D) * scale
+        s = jnp.dot(qf, k.T, preferred_element_type=jnp.float32)  # (G*bq, bk)
+        q_pos = q_start + lax.broadcasted_iota(jnp.int32, (G * bq, bk), 0) % bq
+        # NOTE: row index within the (G*bq) block is h*bq + q_off; q position
+        # depends only on q_off -> mod bq
+        k_pos = k_start + lax.broadcasted_iota(jnp.int32, (G * bq, bk), 1)
+        if causal:
+            vis = k_pos <= q_pos
+            if window is not None:
+                vis &= k_pos > q_pos - window
+            if prefix:
+                vis |= k_pos < prefix
+            s = jnp.where(vis, s, NEG_INF)
+        m_prev = m_ref[...]                            # (G*bq,) as (G*bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(m_prev - m_new)
+        corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, corr)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        G = o_ref.shape[1]
+        acc = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = acc.reshape(G, bq, -1).astype(o_ref.dtype)
+        lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+        lse_ref[0] = lse.reshape(G, bq)
+
+
+def block_pairs(S, Sk, bq, bk, causal, prefix) -> int:
+    """Exact number of (q,k) pairs the kernel's MXU touches (block-run
+    granularity — masked lanes inside a running block still do work)."""
+    nq, nk = S // bq, Sk // bk
+    if not causal:
+        return S * Sk
+    n_run = 0
+    for qi in range(nq):
+        for ki in range(nk):
+            if ki * bk <= qi * bq + bq - 1 or ki * bk < prefix:
+                n_run += 1
+    return n_run * bq * bk
+
+
+def fwd_cost(BKV, G, S, Sk, D, bq, bk, causal, prefix, dtype_bytes=4):
+    pairs = BKV * G * block_pairs(S, Sk, bq, bk, causal, prefix)
+    io = (BKV * G * S * D * 2 + BKV * Sk * D * 2) * dtype_bytes \
+        + BKV * G * S * 4
+    return pl.CostEstimate(flops=4 * pairs * D, bytes_accessed=io,
+                           transcendentals=pairs)
+
+
+def group(q, k, v):
+    """(B, S, H, D) layout -> GQA-grouped (B*KV, G, S, D) / (B*KV, Sk, D)."""
+    B, S, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = (q.transpose(0, 2, 1, 3).reshape(B, KV, G, S, D)
+          .reshape(B * KV, G, S, D))
+    kg = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+    return qg, kg, vg
+
+
+def ungroup(out, B, KV):
+    BKV, G, S, D = out.shape
+    return (out.reshape(B, KV, G, S, D).reshape(B, KV * G, S, D)
+            .transpose(0, 2, 1, 3))
+
+
+def flash_attention_fwd_grouped(qg, kg, vg, *, causal=True, window=None,
+                                prefix=0, bq: int = DEFAULT_BQ,
+                                bk: int = DEFAULT_BK, interpret: bool = False):
+    """Grouped-layout forward: returns (out (BKV,G,S,D), lse (BKV,G,S))."""
+    BKV, G, S, D = qg.shape
+    Sk = kg.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, Sk)
+    assert S % bq == 0 and Sk % bk == 0, (S, Sk, bq, bk)
+    nq, nk = S // bq, Sk // bk
+    scale = 1.0 / np.sqrt(D)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, prefix=prefix,
+        bq=bq, bk=bk, nk=nk)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(BKV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, bq, D), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, bq, D), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, G, bq), lambda b, i, j: (b, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, G, S, D), qg.dtype),
+            jax.ShapeDtypeStruct((BKV, G, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G * bq, 1), jnp.float32),   # m
+            pltpu.VMEM((G * bq, 1), jnp.float32),   # l
+            pltpu.VMEM((G * bq, D), jnp.float32),   # acc
+        ],
+        cost_estimate=fwd_cost(BKV, G, S, Sk, D, bq, bk, causal, prefix,
+                               jnp.dtype(qg.dtype).itemsize),
+        name=f"flash_fwd_causal{int(causal)}",
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out, lse
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, prefix=0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q: (B, S, H, D); k, v: (B, Sk, KV, D) with H % KV == 0.
+    Returns (B, S, H, D).  S, Sk must divide by the block sizes.
+    NON-differentiable entry (serving); training uses ops.flash_attention."""
+    B, KV = q.shape[0], k.shape[2]
+    qg, kg, vg = group(q, k, v)
+    out, _ = flash_attention_fwd_grouped(
+        qg, kg, vg, causal=causal, window=window, prefix=prefix,
+        bq=bq, bk=bk, interpret=interpret)
+    return ungroup(out, B, KV)

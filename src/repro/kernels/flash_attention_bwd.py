@@ -1,0 +1,193 @@
+"""Flash attention backward Pallas kernels (TPU).
+
+Standard two-kernel flash backward with the log-sum-exp trick:
+  residuals: q, k, v, out, lse (= m + log l), delta (= rowsum(dout * out)).
+  dq kernel : grid (B*KV, nq, nk) — accumulates dq for one q block across
+              key blocks in VMEM scratch.
+  dkv kernel: grid (B*KV, nk, nq) — accumulates dk, dv for one key block
+              across q blocks.
+Both recompute p = exp(q k^T * scale - lse) per tile — no score tensor ever
+reaches HBM, matching the forward kernel's traffic model.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _bwd_cost(BKV, G, S, Sk, D, bq, bk, causal, prefix, n_dots, itemsize):
+    from repro.kernels.flash_attention import block_pairs
+
+    pairs = BKV * G * block_pairs(S, Sk, bq, bk, causal, prefix)
+    io = (BKV * G * S * D * 3 + BKV * Sk * D * 2 * 2) * itemsize \
+        + BKV * G * S * 8
+    return pl.CostEstimate(flops=2 * n_dots * pairs * D, bytes_accessed=io,
+                           transcendentals=pairs)
+
+
+def _mask(s, q_start, k_start, bq, bk, G, causal, window, prefix):
+    q_pos = q_start + lax.broadcasted_iota(jnp.int32, (G * bq, bk), 0) % bq
+    k_pos = k_start + lax.broadcasted_iota(jnp.int32, (G * bq, bk), 1)
+    if causal:
+        vis = k_pos <= q_pos
+        if window is not None:
+            vis &= k_pos > q_pos - window
+        if prefix:
+            vis |= k_pos < prefix
+        return jnp.where(vis, s, NEG_INF)
+    return s
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, scale, causal, window, prefix, bq, bk, nk):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start, k_start = qi * bq, ki * bk
+    run = True
+    if causal:
+        run = (k_start <= q_start + bq - 1) | (k_start < prefix)
+
+    @pl.when(run)
+    def _body():
+        G = q_ref.shape[1]
+        D = q_ref.shape[3]
+        q = q_ref[0].astype(jnp.float32).reshape(G * bq, D)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32).reshape(G * bq, D)
+        lse = lse_ref[0, 0]                    # (G*bq, 1)
+        delta = delta_ref[0, 0]                # (G*bq, 1)
+        s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)
+        s = _mask(s, q_start, k_start, bq, bk, G, causal, window, prefix)
+        p = jnp.exp(s - lse)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta)
+        acc_ref[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        G = dq_ref.shape[1]
+        dq_ref[0] = acc_ref[...].reshape(G, bq, -1).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *,
+                scale, causal, window, prefix, bq, bk, nq):
+    ki, qi = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start, k_start = qi * bq, ki * bk
+    run = True
+    if causal:
+        run = (k_start <= q_start + bq - 1) | (k_start < prefix)
+
+    @pl.when(run)
+    def _body():
+        G = q_ref.shape[1]
+        D = q_ref.shape[3]
+        q = q_ref[0].astype(jnp.float32).reshape(G * bq, D)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32).reshape(G * bq, D)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)
+        s = _mask(s, q_start, k_start, bq, bk, G, causal, window, prefix)
+        p = jnp.exp(s - lse)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta)
+        dk_acc[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+
+    @pl.when(qi == nq - 1)
+    def _fin():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, prefix,
+                        bq, bk, interpret=False):
+    """All grouped tensors: q/do/out (BKV, G, S, D); k/v (BKV, Sk, D);
+    lse (BKV, G*S... see ops.py for the packing).  Returns (dq, dk, dv)."""
+    BKV, G, S, D = q.shape
+    Sk = k.shape[1]
+    nq, nk = S // bq, Sk // bk
+    scale = 1.0 / np.sqrt(D)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                               # (BKV, G, S)
+
+    # lse/delta packed to (BKV, nq, G*bq, 1) so a (G*bq, 1) tile aligns with
+    # the kernels' row blocks
+    def pack(x):
+        return (x.reshape(BKV, G, nq, bq).transpose(0, 2, 1, 3)
+                .reshape(BKV, nq, G * bq, 1))
+
+    lse_p, delta_p = pack(lse), pack(delta)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          window=window, prefix=prefix, bq=bq, bk=bk, nk=nk),
+        grid=(BKV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, bq, D), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, G, bq, D), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, 1, G * bq, 1), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, G * bq, 1), lambda b, i, j: (b, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, bq, D), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, G, S, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G * bq, D), jnp.float32)],
+        cost_estimate=_bwd_cost(BKV, G, S, Sk, D, bq, bk, causal, prefix,
+                                n_dots=3, itemsize=jnp.dtype(q.dtype).itemsize),
+        name=f"flash_dq_causal{int(causal)}",
+        interpret=interpret,
+    )(q, k, v, do, lse_p, delta_p)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          window=window, prefix=prefix, bq=bq, bk=bk, nq=nq),
+        grid=(BKV, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, G, bq, D), lambda b, j, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, G, bq, D), lambda b, j, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, 1, G * bq, 1), lambda b, j, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, G * bq, 1), lambda b, j, i: (b, i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, D), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, Sk, D), k.dtype),
+            jax.ShapeDtypeStruct((BKV, Sk, D), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, D), jnp.float32)],
+        cost_estimate=_bwd_cost(BKV, G, S, Sk, D, bq, bk, causal, prefix,
+                                n_dots=4, itemsize=jnp.dtype(q.dtype).itemsize),
+        name=f"flash_dkv_causal{int(causal)}",
+        interpret=interpret,
+    )(q, k, v, do, lse_p, delta_p)
+    return dq, dk, dv

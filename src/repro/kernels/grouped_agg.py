@@ -1,0 +1,80 @@
+"""Fused filter + grouped aggregation Pallas kernel (TPU).
+
+The paper's dominant inner loop (Q1: predicate + 6-group, 6-measure
+aggregate over lineitem) is a scalar hash-table update per row on CPUs.  The
+TPU-native formulation: evaluate the predicate on the VPU and contract a
+one-hot group matrix against the measure block on the MXU —
+``out[g, c] += sum_n onehot[g, n] * measures[n, c]``.
+
+Tiling: the measure block (BN, C) and the one-hot (G, BN) both live in VMEM;
+G and C are tiny (<= 64), BN is the streaming dimension.  The (G, C)
+accumulator is the kernel output, revisited every grid step (sequential TPU
+grid), initialized at step 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048  # rows per grid step; (BN, C) f32 tile ~ 2048*8*4 = 64 KiB
+
+
+def _kernel(measures_ref, groups_ref, pred_ref, out_ref, *, cutoff, num_groups):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    measures = measures_ref[...]          # (BN, C) f32
+    groups = groups_ref[...]              # (1, BN) i32
+    pred = pred_ref[...]                  # (1, BN) i32
+    bn = measures.shape[0]
+    sel = pred <= cutoff                  # fused predicate (VPU)
+    gids = lax.broadcasted_iota(jnp.int32, (num_groups, bn), 0)
+    onehot = jnp.where((groups == gids) & sel, 1.0, 0.0).astype(jnp.float32)
+    out_ref[...] += jnp.dot(onehot, measures, preferred_element_type=jnp.float32)
+
+
+def filtered_group_sum(
+    measures,
+    groups,
+    pred,
+    cutoff,
+    num_groups: int,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """sum(measures[n]) per group over rows with pred[n] <= cutoff.
+
+    measures: (N, C) f32;  groups: (N,) i32 in [0, num_groups);
+    pred: (N,) i32 (e.g. l_shipdate);  cutoff: static int.
+    Returns (num_groups, C) f32.
+    """
+    n, c = measures.shape
+    pad = (-n) % block
+    if pad:
+        measures = jnp.pad(measures, ((0, pad), (0, 0)))
+        groups = jnp.pad(groups, (0, pad))
+        # padded rows fail the predicate
+        pred = jnp.pad(pred, (0, pad), constant_values=cutoff + 1)
+    n_pad = n + pad
+    grid = (n_pad // block,)
+    kernel = functools.partial(_kernel, cutoff=cutoff, num_groups=num_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((num_groups, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, c), jnp.float32),
+        interpret=interpret,
+    )(measures, groups[None, :], pred[None, :])

@@ -1,0 +1,156 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container,
+unit tests) they execute in interpret mode against the same BlockSpec
+schedule.  ``use_kernels(False)`` (or REPRO_NO_KERNELS=1) falls back to the
+pure-jnp oracles in ref.py — plans call through these wrappers only.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import bitset_pack, grouped_agg, mbit_codec, ref, topk_select
+
+_FORCE_REF = os.environ.get("REPRO_NO_KERNELS", "0") == "1"
+_USE_KERNELS = not _FORCE_REF
+
+
+def use_kernels(enable: bool) -> None:
+    global _USE_KERNELS
+    _USE_KERNELS = enable and not _FORCE_REF
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("cutoff", "num_groups", "block"))
+def filtered_group_sum(measures, groups, pred, *, cutoff, num_groups, block=2048):
+    if not _USE_KERNELS:
+        return ref.filtered_group_sum(measures, groups, pred, cutoff, num_groups)
+    return grouped_agg.filtered_group_sum(
+        measures, groups, pred, cutoff, num_groups, block=block,
+        interpret=_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def block_topk(values, keys, *, k, mask=None, block=4096):
+    if not _USE_KERNELS:
+        return ref.block_topk(values, keys, k, mask, block)
+    return topk_select.block_topk(
+        values, keys, k, mask, block=block, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("value", "block"))
+def predicate_bitset(column, *, value, block=8192):
+    if not _USE_KERNELS:
+        return ref.predicate_bitset(column, value)
+    return bitset_pack.predicate_bitset(
+        column, value, block=block, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("m", "group"))
+def mbit_encode(q, *, m, group):
+    if not _USE_KERNELS:
+        return ref.mbit_encode(q, m, group)
+    return mbit_codec.encode(q, m, group, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("m", "group"))
+def mbit_decode_bounds(words, shifts, *, m, group):
+    return mbit_codec.decode_bounds(words, shifts, m, group)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (custom_vjp: Pallas fwd + Pallas bwd) — §Perf optimization
+# ---------------------------------------------------------------------------
+
+
+def _fit_block(S: int, target: int) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_grouped(qg, kg, vg, causal, window, prefix, bq, bk):
+    from repro.kernels import flash_attention as FA
+
+    out, _ = FA.flash_attention_fwd_grouped(
+        qg, kg, vg, causal=causal, window=window, prefix=prefix,
+        bq=bq, bk=bk, interpret=_interpret())
+    return out
+
+
+def _flash_fwd(qg, kg, vg, causal, window, prefix, bq, bk):
+    from repro.kernels import flash_attention as FA
+
+    out, lse = FA.flash_attention_fwd_grouped(
+        qg, kg, vg, causal=causal, window=window, prefix=prefix,
+        bq=bq, bk=bk, interpret=_interpret())
+    return out, (qg, kg, vg, out, lse)
+
+
+def _flash_bwd(causal, window, prefix, bq, bk, res, do):
+    from repro.kernels import flash_attention_bwd as FB
+
+    qg, kg, vg, out, lse = res
+    dq, dk, dv = FB.flash_attention_bwd(
+        qg, kg, vg, out, lse, do, causal=causal, window=window,
+        prefix=prefix, bq=bq, bk=bk, interpret=_interpret())
+    return dq, dk, dv
+
+
+_flash_grouped.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _maybe_shard_map(fn, arg_specs, out_spec):
+    """Wrap a grouped-kernel call in shard_map when an ambient mesh is set —
+    GSPMD otherwise REPLICATES pallas_call operands (models/runtime.py)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import runtime
+
+    ctx = runtime.current()
+    if ctx is None:
+        return fn
+    mesh, _ = ctx
+    return jax.shard_map(fn, mesh=mesh, in_specs=arg_specs,
+                         out_specs=out_spec, check_vma=False)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, prefix=0,
+                    bq=512, bk=512):
+    """Differentiable flash attention, (B, S, H, D) layout (GQA via the KV
+    dim of k/v).  Block sizes auto-shrink to divide the sequence lengths.
+    Runs per-shard (shard_map over the fused batch*kv dim) when an ambient
+    mesh is active."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import flash_attention as FA
+    from repro.models import runtime
+
+    B, KV = q.shape[0], k.shape[2]
+    bq = _fit_block(q.shape[1], bq)
+    bk = _fit_block(k.shape[1], bk)
+    qg, kg, vg = FA.group(q, k, v)
+    ctx = runtime.current()
+    if ctx is not None:
+        bkv = runtime.fused_bkv_spec()
+        spec4 = P(bkv, None, None, None)
+        spec3 = P(bkv, None, None)
+        call = _maybe_shard_map(
+            lambda a, b_, c: _flash_grouped(a, b_, c, causal, window, prefix,
+                                            bq, bk),
+            (spec4, spec3, spec3), spec4)
+        out = call(qg, kg, vg)
+    else:
+        out = _flash_grouped(qg, kg, vg, causal, window, prefix, bq, bk)
+    return FA.ungroup(out, B, KV)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (interpret-mode validation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import compression
+
+
+def filtered_group_sum(measures, groups, pred, cutoff, num_groups):
+    sel = pred <= cutoff
+    onehot = (
+        groups[None, :] == jnp.arange(num_groups, dtype=groups.dtype)[:, None]
+    ) & sel[None, :]
+    return jnp.dot(
+        onehot.astype(jnp.float32),
+        measures.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def block_topk(values, keys, k, mask=None, block: int = 4096):
+    v = values.astype(jnp.float32)
+    if mask is not None:
+        v = jnp.where(mask, v, -jnp.inf)
+    n = v.shape[0]
+    pad = (-n) % block
+    v = jnp.pad(v, (0, pad), constant_values=-jnp.inf)
+    keys = jnp.pad(keys, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    vb = v.reshape(-1, block)
+    kb = keys.reshape(-1, block)
+    out_v, out_k = [], []
+    for j in range(k):
+        m = jnp.max(vb, axis=1)
+        am = jnp.argmax(vb, axis=1)
+        out_v.append(m)
+        out_k.append(jnp.take_along_axis(kb, am[:, None], axis=1)[:, 0])
+        vb = vb.at[jnp.arange(vb.shape[0]), am].set(-jnp.inf)
+    return jnp.stack(out_v, axis=1), jnp.stack(out_k, axis=1)
+
+
+def predicate_bitset(column, value):
+    bits = column == value
+    pad = (-bits.shape[0]) % 32
+    bits = jnp.concatenate([bits, jnp.zeros(pad, bool)])
+    return compression.pack_bitset(bits)
+
+
+def mbit_encode(q, m, group):
+    K = q.shape[0]
+    g = q.reshape(K // group, group)
+    gmax = jnp.max(g, axis=1)
+    # significant bits via log2-free ladder (same as the kernel)
+    x = gmax
+    bits = jnp.zeros_like(x)
+    for shift in (16, 8, 4, 2, 1):
+        above = x >= (jnp.uint32(1) << shift)
+        bits = jnp.where(above, bits + shift, bits)
+        x = jnp.where(above, x >> shift, x)
+    nbits = bits + (x > 0).astype(jnp.uint32)
+    shiftv = jnp.maximum(nbits.astype(jnp.int32) - m, 0).astype(jnp.uint32)
+    codes = (g >> shiftv[:, None]).reshape(K)
+    words = compression.pack_bits(codes, m)
+    return words, shiftv
+
+
+def mbit_decode_bounds(words, shifts, m, group):
+    K = shifts.shape[0] * group
+    codes = compression.unpack_bits(words, K, m)
+    s = jnp.repeat(shifts, group, total_repeat_length=K)
+    lower = codes << s
+    upper = lower + ((jnp.uint32(1) << s) - jnp.uint32(1))
+    return lower, upper
+
+
+def flash_attention(q, k, v, causal=True, window=None, prefix=0):
+    """Pure-jnp oracle for the flash kernel: full-materialization GQA
+    attention.  q: (B,S,H,D); k,v: (B,Sk,KV,D)."""
+    import numpy as np
+    import jax
+
+    B, S, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B, KV, G, S, D)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) / np.sqrt(D)
+    if causal:
+        q_pos = jnp.arange(S)[:, None]
+        k_pos = jnp.arange(Sk)[None, :]
+        vis = k_pos <= q_pos
+        if window is not None:
+            vis &= k_pos > q_pos - window
+        if prefix:
+            vis |= k_pos < prefix
+        s = jnp.where(vis[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return (o.reshape(B, H, S, D).transpose(0, 2, 1, 3)).astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Per-block local top-k Pallas kernel (TPU).
+
+Step 1 of the paper's §3.2.3 scheme (and of the distributed top-k sampler in
+``repro.serve``): each node reduces its partition to k candidates.  On TPU a
+small fixed k is selected with k masked-argmax sweeps over a VMEM-resident
+block — k*BN VPU work, no sort, no scatter (hardware-friendly for k <= ~128).
+
+Per grid step the kernel emits that block's (k values, k keys); the tiny
+(num_blocks, k) tails are merged by the ops.py wrapper.  Ties break toward
+the smaller key: within a block argmax returns the first (= lowest-key)
+occurrence, and the wrapper's final merge uses (value desc, key asc).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+NEG_INF = float("-inf")
+
+
+def _kernel(vals_ref, keys_ref, out_v_ref, out_k_ref, *, k):
+    vals = vals_ref[...]            # (1, BN) f32
+    keys = keys_ref[...]            # (1, BN) i32
+    for j in range(k):              # k static and small: unrolled sweeps
+        m = jnp.max(vals)
+        am = jnp.argmax(vals)       # first occurrence -> smallest key
+        out_v_ref[0, j] = m
+        out_k_ref[0, j] = keys.reshape(-1)[am]
+        vals = jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1) == am,
+            NEG_INF,
+            vals,
+        )
+
+
+def block_topk(
+    values,
+    keys,
+    k: int,
+    mask=None,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """Per-block top-k: returns ((num_blocks, k) values, (num_blocks, k) keys).
+
+    values: (N,) f32;  keys: (N,) i32;  mask: optional (N,) bool — masked
+    rows never win (value forced to -inf).
+    """
+    n = values.shape[0]
+    v = values.astype(jnp.float32)
+    if mask is not None:
+        v = jnp.where(mask, v, NEG_INF)
+    pad = (-n) % block
+    if pad:
+        v = jnp.pad(v, (0, pad), constant_values=NEG_INF)
+        keys = jnp.pad(keys, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    n_pad = n + pad
+    grid = (n_pad // block,)
+    kernel = functools.partial(_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad // block, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad // block, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(v[None, :], keys[None, :])

@@ -1,0 +1,90 @@
+"""Traffic/FLOP breakdown by primitive and by op shape — the hillclimb's
+profiling instrument (the CPU container's stand-in for a TPU profile).
+
+Usage:
+    from repro.launch.breakdown import breakdown
+    rows = breakdown(step_fn, *args)     # list of (label, flops, bytes)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.launch import flops as FL
+
+
+def breakdown(fn, *args, top: int = 20):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    acc: dict[str, list] = {}
+
+    def add(label, f, t, scale):
+        e = acc.setdefault(label, [0.0, 0.0, 0])
+        e[0] += f * scale
+        e[1] += t * scale
+        e[2] += scale
+
+    def walk(j, scale=1.0):
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if name == "dot_general":
+                f = FL._dot_flops(eqn)
+                t = sum(FL._bytes(v.aval) for v in
+                        list(eqn.invars) + list(eqn.outvars))
+                shapes = "x".join(str(tuple(v.aval.shape)) for v in eqn.invars)
+                add(f"dot {shapes}", f, t, scale)
+            elif name == "conv_general_dilated":
+                add("conv", FL._conv_flops(eqn),
+                    sum(FL._bytes(v.aval) for v in
+                        list(eqn.invars) + list(eqn.outvars)), scale)
+            elif name == "scan":
+                walk(eqn.params["jaxpr"].jaxpr, scale * eqn.params["length"])
+                L = eqn.params["length"]
+                nc, ncar = eqn.params["num_consts"], eqn.params["num_carry"]
+                per = sum(FL._bytes(v.aval) // max(L, 1)
+                          for v in eqn.invars[nc + ncar:])
+                per += sum(FL._bytes(v.aval) // max(L, 1)
+                           for v in eqn.outvars[ncar:])
+                add("scan_io", 0.0, per * L, scale)
+            elif name == "pallas_call":
+                ce = eqn.params.get("cost_estimate")
+                if ce is not None:
+                    add(f"pallas:{eqn.params.get('name')}",
+                        float(ce.flops), float(ce.bytes_accessed), scale)
+            elif name in ("pjit", "jit", "closed_call", "custom_jvp_call",
+                          "custom_vjp_call", "remat2", "remat", "checkpoint",
+                          "custom_lin", "shard_map", "custom_vjp_call_jaxpr"):
+                inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                         or eqn.params.get("fun_jaxpr"))
+                if inner is not None:
+                    walk(inner.jaxpr if hasattr(inner, "jaxpr") else inner,
+                         scale)
+            elif name == "gather":
+                t = _g = FL._bytes(eqn.outvars[0].aval) + sum(
+                    FL._bytes(v.aval) for v in eqn.invars[1:])
+                add(f"gather {tuple(eqn.outvars[0].aval.shape)}", 0.0, t, scale)
+            elif name == "dynamic_slice":
+                add("dynamic_slice", 0.0, FL._bytes(eqn.outvars[0].aval), scale)
+            elif name == "dynamic_update_slice":
+                add("dynamic_update_slice", 0.0,
+                    2 * FL._bytes(eqn.invars[1].aval), scale)
+            elif name in ("scatter", "scatter-add", "scatter_add"):
+                add("scatter", 0.0, 3 * FL._bytes(eqn.invars[-1].aval), scale)
+            elif name in FL.HEAVY:
+                add(name, 0.0, sum(FL._bytes(v.aval) for v in
+                                   list(eqn.invars) + list(eqn.outvars)), scale)
+
+    walk(jaxpr.jaxpr)
+    inputs = sum(FL._bytes(v.aval) for v in jaxpr.jaxpr.invars)
+    acc["(program inputs)"] = [0.0, float(inputs), 1]
+    rows = sorted(
+        [(k, v[0], v[1], v[2]) for k, v in acc.items()], key=lambda r: -r[2]
+    )[:top]
+    return rows
+
+
+def print_breakdown(fn, *args, top: int = 20, chips: int = 1):
+    rows = breakdown(fn, *args, top=top)
+    print(f"{'label':58s} {'GFLOP/chip':>11s} {'GB/chip':>9s} {'count':>7s}")
+    for label, f, t, n in rows:
+        print(f"{label[:58]:58s} {f/1e9/chips:11.2f} {t/1e9/chips:9.3f} {n:7.0f}")
+    return rows

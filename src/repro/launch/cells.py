@@ -1,0 +1,257 @@
+"""Cell lowering: (architecture x input shape x mesh) -> lowered/compiled
+XLA executable + roofline terms.  Pure library (no env side effects) so
+tests can drive it on small meshes; launch/dryrun.py is the 512-device
+entrypoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeCell, SHAPES, cell_runnable, get_arch
+from repro.data.synthetic import batch_specs
+from repro.launch import flops as FL
+from repro.launch import roofline as RL
+from repro.models import runtime, sharding as SH
+from repro.models.model import build
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import (init_train_state, make_train_step,
+                                    train_state_axes)
+
+
+def _batch_shards(mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n
+
+
+def _rules_for(mesh, batch: int) -> dict:
+    """Degrade the batch rule to replication when the batch doesn't divide
+    the dp shards (long_500k: b=1)."""
+    rules = dict(SH.DEFAULT_RULES)
+    if batch % max(_batch_shards(mesh), 1):
+        rules["batch"] = None
+    return rules
+
+
+def _batch_shardings(cfg, shape: ShapeCell, mesh, rules):
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for k, sds in specs.items():
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        out[k] = NamedSharding(mesh, SH.resolve(axes, mesh, rules))
+    return out
+
+
+def pick_microbatches(cfg, shape: ShapeCell, mesh,
+                      target_tokens_per_device: int = 8192) -> int:
+    if shape.kind != "train":
+        return 1
+    shards = _batch_shards(mesh)
+    tokens_per_device = shape.global_batch * shape.seq_len // shards
+    mb = max(1, tokens_per_device // target_tokens_per_device)
+    # mb must divide global batch and keep >= 1 row per shard
+    while mb > 1 and (shape.global_batch % mb
+                      or (shape.global_batch // mb) % shards):
+        mb -= 1
+    return mb
+
+
+def choose_decode_layout(cfg, shape: ShapeCell, *, chips: int = 256,
+                         data: int = 16):
+    """Pure selection math for the decode layout: the kv shard degree is the
+    smallest-padding power of two whose freed ranks still divide the batch.
+    Returns (mesh_shape, kv_shard, model_b)."""
+    model = chips // data
+    kv = max(cfg.n_kv_heads, 1)
+    best = None
+    ks = 1
+    while ks <= model:
+        model_b = model // ks
+        if shape.global_batch % (data * model_b) == 0:
+            pad = (ks - kv % ks) % ks if kv % ks else 0
+            score = (pad, -ks)
+            if best is None or score < best[0]:
+                best = (score, ks, model_b)
+        ks *= 2
+    assert best is not None, "no valid decode layout"
+    _, kv_shard, model_b = best
+    return (data, kv_shard, model_b), kv_shard, model_b
+
+
+def decode_opt_layout(cfg, shape: ShapeCell, *, chips: int = 256,
+                      data: int = 16):
+    """§Perf decode layout: split the 16-way model axis into
+    (model_kv x model_b) so kv heads shard at their natural degree and the
+    freed ranks absorb BATCH instead of reading padded cache copies.
+
+    Returns (mesh, rules, tp, tp_kv)."""
+    import jax
+
+    model = chips // data
+    mesh_shape, kv_shard, model_b = choose_decode_layout(
+        cfg, shape, chips=chips, data=data)
+    mesh = jax.make_mesh(mesh_shape, ("data", "model_kv", "model_b"))
+    rules = dict(SH.DEFAULT_RULES)
+    rules.update({
+        "batch": ("data", "model_b"),
+        "kv_heads": "model_kv",
+        # weight TP dims use model_kv ONLY: activations occupy model_b with
+        # their batch dim, so (kv, b)-sharded weights would be re-gathered
+        # every decode step (the §Perf log shows those gathers dominating
+        # once the cache shrank).  model_b-replicated dense weights cost
+        # ~0.1-0.4 GB/chip — traded for zero per-step weight collectives.
+        "heads": "model_kv",
+        "vocab": "model_kv",
+        "mlp": "model_kv",
+        # expert buffers carry no batch dim -> the expert dim can keep the
+        # full 2-D shard (dispatch stays collective-free)
+        "expert": ("model_kv", "model_b"),
+        "embed": "data",
+    })
+    return mesh, rules, model, kv_shard
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh_desc: str
+    kind: str
+    runnable: bool
+    skip_reason: str = ""
+    microbatches: int = 1
+    flops_per_device: float = 0.0
+    memory_per_device_bytes: float = 0.0
+    roofline: Optional[dict] = None
+    memory_analysis: str = ""
+    error: str = ""
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               microbatches: int | None = None,
+               fwd_kw: dict | None = None, compile_: bool = True,
+               layout: str = "default", cache_quant: bool = False):
+    """Lower (and compile) one cell.  Returns (lowered, compiled, meta).
+
+    layout="decode_opt": ignore ``mesh`` and build the (data, model_kv,
+    model_b) decode layout (decode cells only).  cache_quant: int8 KV."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_runnable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell skipped: {why}")
+    if layout == "decode_opt":
+        assert shape.kind == "decode"
+        chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        mesh, rules, tp, tp_kv = decode_opt_layout(cfg, shape, chips=chips)
+        model = build(cfg, tp=tp, tp_kv=tp_kv, cache_quant=cache_quant)
+    else:
+        tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+        model = build(cfg, tp=tp, cache_quant=cache_quant)
+        rules = _rules_for(mesh, shape.global_batch)
+    fwd_kw = dict(fwd_kw or {})
+
+    if shape.kind == "train":
+        mb = microbatches or pick_microbatches(cfg, shape, mesh)
+        state_sds = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.key(0)))
+        axes = train_state_axes(model)
+        state_sh = SH.sharding_tree(axes, mesh, rules)
+        batch_sh = _batch_shardings(cfg, shape, mesh, rules)
+        batch_sds = batch_specs(cfg, shape)
+        step = make_train_step(model, AdamWConfig(), microbatches=mb,
+                               fwd_kw=fwd_kw)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        with mesh, runtime.mesh_rules(mesh, rules):
+            lowered = jitted.lower(state_sds, batch_sds)
+            counts = FL.count(step, state_sds, batch_sds)
+        meta = {"microbatches": mb, "counts": counts}
+    elif shape.kind == "prefill":
+        paxes = model.param_axes()
+        psh = SH.sharding_tree(paxes, mesh, rules)
+        psds = jax.tree.map(lambda p: p.value,
+                            jax.eval_shape(model.init, jax.random.key(0)),
+                            is_leaf=lambda x: hasattr(x, "axes"))
+        batch_sh = _batch_shardings(cfg, shape, mesh, rules)
+        batch_sds = batch_specs(cfg, shape)
+        saxes = model.decode_state_axes()
+        ssh = SH.sharding_tree(saxes, mesh, rules)
+
+        def prefill_step(params, batch):
+            state = model.init_decode_state(shape.global_batch, shape.seq_len)
+            logits, new_state = model.prefill(params, batch, state, **fwd_kw)
+            return logits, new_state
+
+        jitted = jax.jit(prefill_step, in_shardings=(psh, batch_sh),
+                         out_shardings=(None, ssh))
+        with mesh, runtime.mesh_rules(mesh, rules):
+            lowered = jitted.lower(psds, batch_sds)
+            counts = FL.count(prefill_step, psds, batch_sds)
+        meta = {"counts": counts}
+    else:  # decode
+        from repro.serve.engine import make_serve_step
+
+        paxes = model.param_axes()
+        psh = SH.sharding_tree(paxes, mesh, rules)
+        psds = jax.tree.map(lambda p: p.value,
+                            jax.eval_shape(model.init, jax.random.key(0)),
+                            is_leaf=lambda x: hasattr(x, "axes"))
+        saxes = model.decode_state_axes()
+        ssh = SH.sharding_tree(saxes, mesh, rules)
+        ssds = jax.eval_shape(
+            lambda: model.init_decode_state(shape.global_batch, shape.seq_len))
+        tok_sh = NamedSharding(mesh, SH.resolve(("batch",), mesh, rules))
+        tok_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        rng_sds = jax.eval_shape(lambda: jax.random.key(0))
+        step = make_serve_step(model, mesh, k=8, rules=rules)
+        jitted = jax.jit(step, in_shardings=(psh, ssh, tok_sh, None),
+                         out_shardings=(tok_sh, ssh), donate_argnums=(1,))
+        with mesh, runtime.mesh_rules(mesh, rules):
+            lowered = jitted.lower(psds, ssds, tok_sds, rng_sds)
+            counts = FL.count(step, psds, ssds, tok_sds, rng_sds)
+        meta = {"counts": counts}
+
+    compiled = lowered.compile() if compile_ else None
+    return lowered, compiled, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_desc: str,
+             **kw) -> CellResult:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_runnable(cfg, shape)
+    res = CellResult(arch=arch, shape=shape_name, mesh_desc=mesh_desc,
+                     kind=shape.kind, runnable=ok, skip_reason=why)
+    if not ok:
+        return res
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name, mesh, **kw)
+        res.microbatches = meta.get("microbatches", 1)
+        chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        mf = RL.model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+        roof = RL.analyze(compiled, chips, model_flops_global=mf,
+                          counts=meta.get("counts"))
+        res.roofline = roof.to_dict()
+        res.flops_per_device = roof.flops_per_device
+        try:
+            ma = compiled.memory_analysis()
+            res.memory_analysis = str(ma)
+            for attr in ("temp_size_in_bytes",):
+                if hasattr(ma, attr):
+                    res.memory_per_device_bytes = float(getattr(ma, attr))
+        except Exception as e:  # noqa: BLE001 — backend-dependent
+            res.memory_analysis = f"unavailable: {e}"
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        res.error = f"{type(e).__name__}: {e}"
+    return res

@@ -1,0 +1,85 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run entrypoint (the ONLY place that asks for 512 placeholder
+devices — smoke tests and benches see the real device count).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod/--single-pod]
+
+Per cell: jit(step).lower(input_specs).compile() on the production mesh,
+print memory_analysis() + cost_analysis(), dump the roofline terms as JSON
+under experiments/dryrun/.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", type=str, default=None)
+    p.add_argument("--shape", type=str, default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--out", type=str, default="experiments/dryrun")
+    p.add_argument("--microbatches", type=int, default=None)
+    args = p.parse_args(argv)
+
+    from repro.configs.registry import ARCHS, SHAPES
+    from repro.launch.cells import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(False, "pod16x16"), (True, "multipod2x16x16")]
+    else:
+        meshes = [(args.multi_pod,
+                   "multipod2x16x16" if args.multi_pod else "pod16x16")]
+
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for multi_pod, desc in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            for shape in shapes:
+                t0 = time.monotonic()
+                res = run_cell(arch, shape, mesh, desc,
+                               microbatches=args.microbatches)
+                dt = time.monotonic() - t0
+                tag = f"{arch}:{shape}:{desc}"
+                if not res.runnable:
+                    print(f"SKIP {tag}  ({res.skip_reason})")
+                elif res.error:
+                    failures += 1
+                    print(f"FAIL {tag}  {res.error}")
+                else:
+                    r = res.roofline
+                    print(f"OK   {tag}  [{dt:.0f}s]  "
+                          f"compute {r['compute_s']*1e3:.2f}ms  "
+                          f"memory {r['memory_s']*1e3:.2f}ms  "
+                          f"collective {r['collective_s']*1e3:.2f}ms  "
+                          f"dominant={r['dominant']}  "
+                          f"roofline_frac={r['roofline_fraction']:.3f}")
+                    print(f"     memory_analysis: {res.memory_analysis[:300]}")
+                cells.append(dataclasses.asdict(res))
+                fname = os.path.join(
+                    args.out, f"{arch}__{shape}__{desc}.json".replace("/", "_"))
+                with open(fname, "w") as f:
+                    json.dump(dataclasses.asdict(res), f, indent=1)
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(cells, f, indent=1)
+    print(f"\n{len(cells)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

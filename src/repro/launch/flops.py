@@ -1,0 +1,166 @@
+"""Jaxpr-based FLOP / HBM-traffic counting for the roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while``/``scan`` BODY once —
+a 60-layer scanned transformer at 32 microbatches is undercounted ~2000x.
+This walker multiplies through scan trip counts and recurses into call
+primitives, giving:
+
+- flops: 2*M*N*K for every dot_general (+conv, counted as dots), the
+  dominant term on an MXU machine;
+- hbm_traffic: a fusion-aware estimate — operand+result bytes of HEAVY ops
+  only (dot/conv/gather/scatter/dynamic-update/reduce/sort/scan carries),
+  on the model that XLA fuses elementwise chains into their consumers so
+  only heavy-op boundaries hit HBM.  Documented as a first-order model in
+  EXPERIMENTS.md; the collective term comes from the partitioned HLO
+  instead (launch/roofline.py).
+
+Counts are GLOBAL (the unpartitioned program); callers divide by chip count
+— which assumes even sharding and no GSPMD-introduced redundant compute
+(padding waste IS included because padded shapes are in the jaxpr).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import numpy as np
+from jax import core
+
+
+def _bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001 — abstract tokens etc.
+        return 0
+
+
+HEAVY = {
+    "sort", "reduce_sum", "reduce_max", "reduce_min", "argmax", "argmin",
+    "cumsum", "cumlogsumexp", "top_k", "rev",
+}
+
+# ops whose HBM traffic is NOT their full operand set:
+#   gather reads only the gathered rows (+indices), not the whole table;
+#   scatter/dus does a read-modify-write of the touched region only.
+SPARSE_ACCESS = {"gather", "scatter", "scatter-add", "scatter_add",
+                 "dynamic_update_slice", "dynamic_slice"}
+
+
+@dataclasses.dataclass
+class Counts:
+    flops: float = 0.0
+    traffic: float = 0.0
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.traffic += o.traffic
+        return self
+
+    def scaled(self, k: float) -> "Counts":
+        return Counts(self.flops * k, self.traffic * k)
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    m = int(np.prod([d for i, d in enumerate(a.shape)
+                     if i not in lc and i not in lb]))
+    k = int(np.prod([a.shape[i] for i in lc]))
+    batch = int(np.prod([a.shape[i] for i in lb])) if lb else 1
+    n = int(np.prod([d for i, d in enumerate(b.shape)
+                     if i not in rc and i not in rb]))
+    return 2.0 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops = 2 * out_elems * (kernel spatial * in_channels)
+    kernel = int(np.prod(rhs.shape[:-1]))
+    return 2.0 * int(np.prod(out.shape)) * kernel
+
+
+def count_jaxpr(jaxpr) -> Counts:
+    c = Counts()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            c.flops += _dot_flops(eqn)
+            c.traffic += sum(_bytes(v.aval) for v in eqn.invars)
+            c.traffic += sum(_bytes(v.aval) for v in eqn.outvars)
+        elif name == "conv_general_dilated":
+            c.flops += _conv_flops(eqn)
+            c.traffic += sum(_bytes(v.aval) for v in eqn.invars)
+            c.traffic += sum(_bytes(v.aval) for v in eqn.outvars)
+        elif name == "scan":
+            body = count_jaxpr(eqn.params["jaxpr"].jaxpr)
+            length = eqn.params["length"]
+            c += body.scaled(length)
+            # xs slices are views consumed by inner ops (counted at their
+            # use); ys stacking is the inner producers' writes (counted at
+            # the producer).  Counting them here double-counted the KV cache
+            # and layer params once per step — see EXPERIMENTS.md §Perf
+            # (instrument-fix iteration).
+        elif name == "while":
+            # bounded loops only appear in OLAP plans; use 1 iteration as the
+            # conservative floor (documented)
+            c += count_jaxpr(eqn.params["body_jaxpr"].jaxpr)
+        elif name in ("pjit", "jit", "closed_call", "core_call", "remat_call",
+                      "xla_call", "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "checkpoint", "remat",
+                      "remat2", "custom_lin", "shard_map"):
+            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                c += count_jaxpr(ij)
+        elif name == "cond":
+            branches = eqn.params.get("branches", ())
+            if branches:
+                sub = [count_jaxpr(b.jaxpr) for b in branches]
+                c += max(sub, key=lambda s: s.flops)
+        elif name == "pallas_call":
+            ce = eqn.params.get("cost_estimate")
+            if ce is not None:
+                # kernel-author-declared cost (flash attention kernels):
+                # bytes_accessed is the HBM traffic, VMEM tiles excluded
+                c.flops += float(ce.flops)
+                c.traffic += float(ce.bytes_accessed)
+            else:
+                inner = eqn.params.get("jaxpr")
+                gm = eqn.params.get("grid_mapping")
+                grid = int(np.prod(getattr(gm, "grid", (1,)) or (1,)))
+                if inner is not None:
+                    ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                    c += count_jaxpr(ij).scaled(grid)
+        elif name in SPARSE_ACCESS:
+            if name == "gather":
+                # output rows + indices
+                c.traffic += _bytes(eqn.outvars[0].aval)
+                c.traffic += sum(_bytes(v.aval) for v in eqn.invars[1:])
+            elif name in ("dynamic_slice",):
+                c.traffic += _bytes(eqn.outvars[0].aval)
+            elif name == "dynamic_update_slice":
+                # write the update region (aliased buffer elsewhere)
+                c.traffic += 2 * _bytes(eqn.invars[1].aval)
+            else:  # scatter*: RMW of touched region ~ 2x updates + indices
+                upd = eqn.invars[-1].aval
+                c.traffic += 3 * _bytes(upd)
+        elif name in HEAVY:
+            c.traffic += sum(_bytes(v.aval) for v in eqn.invars)
+            c.traffic += sum(_bytes(v.aval) for v in eqn.outvars)
+        elif name in ("all_to_all", "ppermute", "all_gather", "psum",
+                      "reduce_scatter"):
+            c.traffic += sum(_bytes(v.aval) for v in eqn.outvars)
+    return c
+
+
+def count(fn, *args, **kw) -> Counts:
+    """Program-input bytes are NOT added here: heavy ops count their operand
+    reads at each use site (a param read by a dot is counted by the dot),
+    so adding inputs again double-counts — fused elementwise-only consumers
+    are the (small) undercounted remainder."""
+    jaxpr = jax.make_jaxpr(fn, **kw)(*args)
+    return count_jaxpr(jaxpr.jaxpr)

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+
+Meshes:
+  single pod : (16, 16)    axes (data, model)   = 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16) axes (pod, data, model) = 512 chips
+
+The OLAP engine views the same devices as a flat P-way "nodes" axis (the
+paper's shared-nothing cluster); `olap_cluster` builds that view.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False, devices=None):
+    """Scaled-down mesh for CI (8 host devices): (2,2,2) or (4,2)."""
+    devices = devices if devices is not None else jax.devices()[:8]
+    shape = (2, 2, 2) if multi_pod else (4, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def olap_cluster(devices=None):
+    """The paper's P-node shared-nothing view: a 1-D 'nodes' mesh over the
+    same chips the LM meshes use."""
+    from repro.core import Cluster
+
+    return Cluster(devices=devices)
+
+
+def hardware_constants():
+    """TPU v5e targets used by the roofline (per chip)."""
+    return {
+        "peak_flops_bf16": 197e12,   # FLOP/s
+        "hbm_bandwidth": 819e9,      # B/s
+        "ici_link_bandwidth": 50e9,  # B/s per link
+        "hbm_bytes": 16 * 2**30,
+    }

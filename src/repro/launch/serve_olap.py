@@ -1,0 +1,52 @@
+"""OLAP serving launcher: load a TPC-H instance onto the cluster and serve
+queries interactively or as a batch (the paper's evaluation driver).
+
+  PYTHONPATH=src python -m repro.launch.serve_olap --sf 0.05 \
+      --queries q1 q3 q15_approx --repeat 3
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--sf", type=float, default=0.05)
+    p.add_argument("--queries", nargs="*", default=None)
+    p.add_argument("--repeat", type=int, default=3)
+    p.add_argument("--backend", choices=["xla", "one_factor"], default="xla")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.core.plans import PLANS
+    from repro.tpch.driver import TPCHDriver
+
+    d = TPCHDriver(sf=args.sf, seed=args.seed, backend=args.backend)
+    names = args.queries or list(PLANS)
+    print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
+          f"backend {args.backend}")
+    print(f"{'query':>14s} {'compile[s]':>10s} {'run[ms]':>9s}")
+    for name in names:
+        t0 = time.monotonic()
+        fn = d.compile(name)
+        compile_s = time.monotonic() - t0
+        cols = {n: t.columns for n, t in d.placed.items()}
+        out = fn(cols)  # warmup (first execute)
+        jax.block_until_ready(out)
+        times = []
+        for _ in range(args.repeat):
+            t0 = time.monotonic()
+            out = fn(cols)
+            jax.block_until_ready(out)
+            times.append(time.monotonic() - t0)
+        print(f"{name:>14s} {compile_s:10.2f} {min(times)*1e3:9.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Optimized-variant sweep: every train/prefill cell with the §Perf
+optimizations on (flash attention for attention archs; tuned bf16 SSD for
+mamba2), decode cells with the decode_opt layout + int8 cache.  Writes
+experiments/dryrun_opt/ — the 'optimized' column of EXPERIMENTS.md §Perf."""
+import dataclasses
+import json
+import sys
+import time
+
+
+def main():
+    from repro.configs.registry import ARCHS, SHAPES, get_arch, cell_runnable
+    from repro.launch.cells import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    out = "experiments/dryrun_opt"
+    os.makedirs(out, exist_ok=True)
+    mesh = make_production_mesh()
+    cells = []
+    for arch in ARCHS:
+        cfg = get_arch(arch)
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            sh = SHAPES[shape]
+            if not cell_runnable(cfg, sh)[0]:
+                continue
+            kw = {}
+            if sh.kind in ("train", "prefill"):
+                if cfg.family == "ssm":
+                    kw = dict(fwd_kw={"ssm_chunk": 128, "ssm_bf16": True})
+                else:
+                    kw = dict(fwd_kw={"attn_impl": "flash"})
+            else:
+                if cfg.family in ("dense", "moe", "vlm"):
+                    kw = dict(layout="decode_opt", cache_quant=True)
+                else:
+                    continue  # ssm/hybrid/encdec decode already state-bound
+            t0 = time.monotonic()
+            res = run_cell(arch, shape, mesh, "opt_pod256", **kw)
+            dt = time.monotonic() - t0
+            tag = f"{arch}:{shape}"
+            if res.error:
+                print(f"FAIL {tag} {res.error[:160]}", flush=True)
+            else:
+                r = res.roofline
+                print(f"OK   {tag} [{dt:.0f}s] dom={r['dominant']} "
+                      f"frac={r['roofline_fraction']:.4f} "
+                      f"(c {r['compute_s']*1e3:.1f} m {r['memory_s']*1e3:.1f} "
+                      f"x {r['collective_s']*1e3:.1f} ms)", flush=True)
+            with open(os.path.join(out, f"{arch}__{shape}__opt.json"), "w") as f:
+                json.dump(dataclasses.asdict(res), f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 200 --mesh 2x2 --batch 8 --seq 128
+
+Production invocation uses --mesh 16x16 (or 2x16x16 on two pods); the CI/
+example path uses the smoke configs on host devices.  Checkpoint/restart:
+re-running with the same --ckpt dir resumes from the latest atomic step.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def parse_mesh(spec: str):
+    import jax
+
+    dims = tuple(int(x) for x in spec.split("x"))
+    axes = {1: ("data",), 2: ("data", "model"),
+            3: ("pod", "data", "model")}[len(dims)]
+    return jax.make_mesh(dims, axes)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config (CPU-runnable)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--mesh", type=str, default="1")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--ckpt", type=str, default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    from repro.configs import get_arch
+    from repro.data.synthetic import SyntheticLM
+    from repro.models.model import build
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    mesh = parse_mesh(args.mesh)
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    tp = mesh.shape.get("model", 1)
+    model = build(cfg, tp=tp)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       global_batch=args.batch, seed=args.seed)
+    trainer = Trainer(
+        model, data, mesh,
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                    total_steps=args.steps),
+        TrainerConfig(steps=args.steps, checkpoint_dir=args.ckpt,
+                      checkpoint_every=args.ckpt_every,
+                      microbatches=args.microbatches, seed=args.seed),
+    )
+    state, history = trainer.run()
+    print(f"final loss {history[-1]['loss']:.4f} after {len(history)} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

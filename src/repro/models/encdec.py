@@ -1,0 +1,252 @@
+"""Whisper-medium encoder-decoder backbone.
+
+Per the brief the conv/mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, enc_seq, d) and this module consumes them.
+Encoder: bidirectional self-attention, learned positions, layernorm/gelu.
+Decoder: causal self-attention + cross-attention over encoder states.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import ParamBuilder
+from repro.models.transformer import KVCache, stack_layer_params, logits_from_hidden
+
+
+class EncDecCache(NamedTuple):
+    self_k: jax.Array     # (L, B, Smax, KV, hd)
+    self_v: jax.Array
+    cross_k: jax.Array    # (L, B, enc_seq, KV, hd)
+    cross_v: jax.Array
+    length: jax.Array
+
+
+def init_enc_layer(rng, cfg, tp: int, tp_kv=None):
+    b = ParamBuilder(rng)
+    return {
+        "ln1": L.init_norm(b, cfg.d_model, "layernorm"),
+        "attn": L.init_attention(b, cfg, tp, tp_kv),
+        "ln2": L.init_norm(b, cfg.d_model, "layernorm"),
+        "mlp": L.init_mlp(b, cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def init_dec_layer(rng, cfg, tp: int, tp_kv=None):
+    b = ParamBuilder(rng)
+    return {
+        "ln1": L.init_norm(b, cfg.d_model, "layernorm"),
+        "self_attn": L.init_attention(b, cfg, tp, tp_kv),
+        "ln_cross": L.init_norm(b, cfg.d_model, "layernorm"),
+        "cross_attn": L.init_attention(b, cfg, tp, tp_kv),
+        "ln2": L.init_norm(b, cfg.d_model, "layernorm"),
+        "mlp": L.init_mlp(b, cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def init_encdec(rng, cfg, tp: int = 1, tp_kv=None):
+    r_emb, r_enc, r_dec, r_pe, r_pd, r_n1, r_n2 = jax.random.split(rng, 7)
+    b = ParamBuilder(r_emb)
+    bpe, bpd = ParamBuilder(r_pe), ParamBuilder(r_pd)
+    return {
+        "embedding": L.init_embedding(b, cfg.padded_vocab(), cfg.d_model),
+        "enc_pos": bpe.p((cfg.encdec.enc_seq, cfg.d_model), ("seq", "embed_no_fsdp"),
+                         init="embed", scale=0.02),
+        "dec_pos": bpd.p((cfg.max_seq, cfg.d_model), ("seq", "embed_no_fsdp"),
+                         init="embed", scale=0.02),
+        "enc_layers": stack_layer_params(
+            lambda k: init_enc_layer(k, cfg, tp, tp_kv), r_enc,
+            cfg.encdec.n_enc_layers
+        ),
+        "dec_layers": stack_layer_params(
+            lambda k: init_dec_layer(k, cfg, tp, tp_kv), r_dec, cfg.n_layers
+        ),
+        "enc_norm": L.init_norm(ParamBuilder(r_n1), cfg.d_model, "layernorm"),
+        "final_norm": L.init_norm(ParamBuilder(r_n2), cfg.d_model, "layernorm"),
+    }
+
+
+def encode(params, frames, cfg, *, chunk=512, attn_impl="xla"):
+    """frames: (B, enc_seq, d) stub frontend embeddings -> encoder states."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    S = frames.shape[1]
+    x = frames.astype(cd) + params["enc_pos"].astype(cd)[None, :S]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    mask = L.AttnMask(causal=False)
+    cq = _pick_chunk(S, chunk)
+
+    def body(carry, lp):
+        h = L.apply_norm(lp["ln1"], carry, "layernorm")
+        q, k, v = L.qkv(lp["attn"], h, cfg, positions, rope=False)
+        o = L.attention(q, k, v, mask, impl=attn_impl, chunk_q=cq, chunk_k=cq)
+        x = carry + L.attn_out(lp["attn"], o)
+        h = L.apply_norm(lp["ln2"], x, "layernorm")
+        return x + L.apply_mlp(lp["mlp"], h, "gelu"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(body_fn, x, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], x, "layernorm")
+
+
+def _pick_chunk(S: int, target: int) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def decode_train(params, tokens, enc_states, cfg, *, chunk_q=1024,
+                 chunk_k=1024, attn_impl="xla"):
+    """Teacher-forced decoder pass -> hidden states (B, S, d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    S = tokens.shape[1]
+    x = L.embed(params["embedding"], tokens, cd)
+    x = x + params["dec_pos"].astype(cd)[None, :S]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    self_mask = L.AttnMask(causal=True)
+    cross_mask = L.AttnMask(causal=False)
+    Se = enc_states.shape[1]
+    cq = _pick_chunk(S, chunk_q)
+    ck = _pick_chunk(Se, chunk_k)
+
+    def body(carry, lp):
+        h = L.apply_norm(lp["ln1"], carry, "layernorm")
+        q, k, v = L.qkv(lp["self_attn"], h, cfg, positions, rope=False)
+        o = L.attention(q, k, v, self_mask, impl=attn_impl, chunk_q=cq,
+                        chunk_k=cq)
+        x = carry + L.attn_out(lp["self_attn"], o)
+        h = L.apply_norm(lp["ln_cross"], x, "layernorm")
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(cd))
+        ek = jnp.einsum("bsd,dhk->bshk", enc_states, lp["cross_attn"]["wk"].astype(cd))
+        ev = jnp.einsum("bsd,dhk->bshk", enc_states, lp["cross_attn"]["wv"].astype(cd))
+        o = L.attention(q, ek, ev, cross_mask, impl=attn_impl, chunk_q=cq,
+                        chunk_k=ck)
+        x = x + L.attn_out(lp["cross_attn"], o)
+        h = L.apply_norm(lp["ln2"], x, "layernorm")
+        return x + L.apply_mlp(lp["mlp"], h, "gelu"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(body_fn, x, params["dec_layers"])
+    return L.apply_norm(params["final_norm"], x, "layernorm")
+
+
+def forward(params, tokens, frames, cfg, attn_impl="xla", **kw):
+    enc = encode(params, frames, cfg, attn_impl=attn_impl)
+    return decode_train(params, tokens, enc, cfg, attn_impl=attn_impl, **kw)
+
+
+def init_cache(cfg, batch: int, max_len: int, tp: int = 1, dtype=jnp.bfloat16,
+               tp_kv=None):
+    _, KV = cfg.padded_heads(tp, tp_kv)
+    hd = cfg.resolved_head_dim
+    return EncDecCache(
+        self_k=jnp.zeros((cfg.n_layers, batch, max_len, KV, hd), dtype),
+        self_v=jnp.zeros((cfg.n_layers, batch, max_len, KV, hd), dtype),
+        cross_k=jnp.zeros((cfg.n_layers, batch, cfg.encdec.enc_seq, KV, hd), dtype),
+        cross_v=jnp.zeros((cfg.n_layers, batch, cfg.encdec.enc_seq, KV, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_logical_axes():
+    ax = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return EncDecCache(self_k=ax, self_v=ax, cross_k=ax, cross_v=ax, length=())
+
+
+def fill_cross_cache(params, enc_states, cfg, cache: EncDecCache):
+    """Precompute per-layer cross K/V from encoder states (once per request)."""
+    cd = enc_states.dtype
+
+    def body(_, lp):
+        ek = jnp.einsum("bsd,dhk->bshk", enc_states, lp["cross_attn"]["wk"].astype(cd))
+        ev = jnp.einsum("bsd,dhk->bshk", enc_states, lp["cross_attn"]["wv"].astype(cd))
+        return (), (ek, ev)
+
+    _, (ck, cv) = lax.scan(body, (), params["dec_layers"])
+    return cache._replace(cross_k=ck.astype(cache.cross_k.dtype),
+                          cross_v=cv.astype(cache.cross_v.dtype))
+
+
+def prefill(params, tokens, frames, cfg, cache: EncDecCache, *,
+            chunk_q=1024, chunk_k=1024, attn_impl="xla"):
+    """Encode frames, fill the cross cache, run the prompt through the
+    decoder writing self K/V; returns last-position logits + cache."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    enc = encode(params, frames, cfg)
+    S = tokens.shape[1]
+    x = L.embed(params["embedding"], tokens, cd)
+    x = x + params["dec_pos"].astype(cd)[None, :S]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    self_mask = L.AttnMask(causal=True)
+    cross_mask = L.AttnMask(causal=False)
+    Se = enc.shape[1]
+    cq = _pick_chunk(S, chunk_q)
+    ckk = _pick_chunk(Se, chunk_k)
+
+    def body(carry, scanned):
+        h0 = carry
+        lp, sk, sv = scanned
+        h = L.apply_norm(lp["ln1"], h0, "layernorm")
+        q, k, v = L.qkv(lp["self_attn"], h, cfg, positions, rope=False)
+        sk = lax.dynamic_update_slice_in_dim(sk, k.astype(sk.dtype), 0, axis=1)
+        sv = lax.dynamic_update_slice_in_dim(sv, v.astype(sv.dtype), 0, axis=1)
+        o = L.attention(q, k, v, self_mask, impl=attn_impl, chunk_q=cq,
+                        chunk_k=cq)
+        h0 = h0 + L.attn_out(lp["self_attn"], o)
+        h = L.apply_norm(lp["ln_cross"], h0, "layernorm")
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(cd))
+        ek = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"].astype(cd))
+        ev = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"].astype(cd))
+        o = L.attention(q, ek, ev, cross_mask, impl=attn_impl, chunk_q=cq,
+                        chunk_k=ckk)
+        h0 = h0 + L.attn_out(lp["cross_attn"], o)
+        h = L.apply_norm(lp["ln2"], h0, "layernorm")
+        h0 = h0 + L.apply_mlp(lp["mlp"], h, "gelu")
+        return h0, (sk, sv, ek.astype(sk.dtype), ev.astype(sv.dtype))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (sk_n, sv_n, ck_n, cv_n) = lax.scan(
+        body_fn, x, (params["dec_layers"], cache.self_k, cache.self_v)
+    )
+    h = L.apply_norm(params["final_norm"], x[:, -1:], "layernorm")
+    logits = logits_from_hidden(params, h, cfg)
+    return logits[:, 0], EncDecCache(sk_n, sv_n, ck_n, cv_n, jnp.int32(S))
+
+
+def decode_step(params, cache: EncDecCache, token, cfg):
+    """One decoder token against self+cross caches."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embedding"], token, cd)
+    new_len = cache.length + 1
+    x = x + params["dec_pos"].astype(cd)[new_len - 1][None, None, :]
+
+    def body(carry, scanned):
+        h0 = carry
+        lp, sk, sv, ck, cv = scanned
+        h = L.apply_norm(lp["ln1"], h0, "layernorm")
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wq"].astype(cd))
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wv"].astype(cd))
+        sk = lax.dynamic_update_slice_in_dim(sk, k.astype(sk.dtype), new_len - 1, axis=1)
+        sv = lax.dynamic_update_slice_in_dim(sv, v.astype(sv.dtype), new_len - 1, axis=1)
+        o = L.decode_attention(q, sk, sv, new_len)
+        h0 = h0 + L.attn_out(lp["self_attn"], o)
+        h = L.apply_norm(lp["ln_cross"], h0, "layernorm")
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(cd))
+        o = L.decode_attention(q, ck, cv, jnp.int32(ck.shape[1]))
+        h0 = h0 + L.attn_out(lp["cross_attn"], o)
+        h = L.apply_norm(lp["ln2"], h0, "layernorm")
+        h0 = h0 + L.apply_mlp(lp["mlp"], h, "gelu")
+        return h0, (sk, sv)
+
+    x, (sk_n, sv_n) = lax.scan(
+        body, x, (params["dec_layers"], cache.self_k, cache.self_v,
+                  cache.cross_k, cache.cross_v)
+    )
+    h = L.apply_norm(params["final_norm"], x, "layernorm")
+    logits = logits_from_hidden(params, h, cfg)
+    return logits[:, 0], cache._replace(self_k=sk_n, self_v=sv_n, length=new_len)

@@ -1,0 +1,283 @@
+"""RecurrentGemma (recurrentgemma-2b): RG-LRU recurrent blocks + local
+sliding-window attention in a (rec, rec, attn) pattern.
+
+The RG-LRU recurrence h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t) is a
+first-order linear recurrence -> computed with lax.associative_scan
+(log-depth, TPU-friendly).  Decode state is the (B, lru_width) hidden plus a
+window-bounded KV cache, so the long_500k cell RUNS for this arch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import ParamBuilder
+
+_C = 8.0  # RG-LRU temperature
+
+
+class HybridState(NamedTuple):
+    lru: jax.Array       # (layers, B, lru_width) recurrent hidden
+    conv: jax.Array      # (layers, B, W-1, lru_width) conv tail
+    k: jax.Array         # (layers, B, window, KV, hd) rolling attn cache
+    v: jax.Array
+    length: jax.Array
+
+
+def is_attn_layer(cfg, i: int) -> bool:
+    hy = cfg.hybrid
+    return i % hy.period == hy.attn_position
+
+
+def init_rec_layer(rng, cfg):
+    b = ParamBuilder(rng)
+    d = cfg.d_model
+    lw = cfg.hybrid.lru_width or d
+    W = 4
+    return {
+        "norm": L.init_norm(b, d, "rmsnorm"),
+        "w_x": b.p((d, lw), ("embed", "mlp")),
+        "w_gate": b.p((d, lw), ("embed", "mlp")),
+        "conv": b.p((W, lw), ("conv", "mlp"), init="normal", scale=0.1),
+        "lambda_p": b.p((lw,), ("mlp",), init="ones"),
+        "w_a": b.p((lw, lw), ("mlp", None)),
+        "b_a": b.p((lw,), (None,), init="zeros"),
+        "w_i": b.p((lw, lw), ("mlp", None)),
+        "b_i": b.p((lw,), (None,), init="zeros"),
+        "out_proj": b.p((lw, d), ("mlp", "embed")),
+    }
+
+
+def init_hybrid_layer(rng, cfg, tp: int, tp_kv=None):
+    """Every layer carries BOTH block param sets stacked uniformly (scan needs
+    homogeneous pytrees); the unused half is inert per layer index."""
+    from repro.models.transformer import init_layer
+
+    r1, r2 = jax.random.split(rng)
+    return {"attn_block": init_layer(r1, cfg, tp, tp_kv),
+            "rec_block": init_rec_layer(r2, cfg)}
+
+
+def init_hybrid(rng, cfg, tp: int = 1, tp_kv=None):
+    from repro.models.transformer import stack_layer_params
+
+    r_emb, r_layers, r_norm = jax.random.split(rng, 3)
+    b = ParamBuilder(r_emb)
+    return {
+        "embedding": L.init_embedding(b, cfg.padded_vocab(), cfg.d_model),
+        "layers": stack_layer_params(
+            lambda k: init_hybrid_layer(k, cfg, tp, tp_kv), r_layers,
+            cfg.n_layers
+        ),
+        "final_norm": L.init_norm(ParamBuilder(r_norm), cfg.d_model, "rmsnorm"),
+    }
+
+
+def _lru_scan(a, bx, h0=None):
+    """h_t = a_t * h_{t-1} + bx_t along axis 1 via associative_scan.
+    a, bx: (B, S, lw)."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    _, h = lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def apply_rec_block(p, x, cfg, *, state=None, conv_tail=None):
+    """RG-LRU block.  Train: state=None, full sequence.  Decode: x (B,1,d)
+    with carried state/conv_tail.  Returns (y, new_state, new_conv_tail)."""
+    cd = x.dtype
+    lw = cfg.hybrid.lru_width or cfg.d_model
+    h = L.apply_norm(p["norm"], x, "rmsnorm")
+    xin = jnp.einsum("bsd,dl->bsl", h, p["w_x"].astype(cd))
+    gate = jnp.einsum("bsd,dl->bsl", h, p["w_gate"].astype(cd))
+    W = p["conv"].shape[0]
+    if conv_tail is None:
+        xp = jnp.pad(xin, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_tail, xin], axis=1)
+    conv = jnp.zeros_like(xin)
+    for w in range(W):
+        conv = conv + xp[:, w : w + xin.shape[1]] * p["conv"].astype(cd)[w][None, None]
+    new_tail = xp[:, -(W - 1):] if W > 1 else xp[:, :0]
+    u = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid(u @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lambda_p"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+    if x.shape[1] == 1 and state is not None:
+        hseq = a[:, 0] * state + gated_in[:, 0]
+        new_state = hseq
+        hseq = hseq[:, None]
+    else:
+        hseq = _lru_scan(a, gated_in, h0=state)
+        new_state = hseq[:, -1]
+    y = (hseq.astype(cd) * jax.nn.gelu(gate))
+    out = jnp.einsum("bsl,ld->bsd", y, p["out_proj"].astype(cd))
+    return x + out, new_state, new_tail
+
+
+def forward(params, tokens, cfg, *, chunk_q=1024, chunk_k=1024,
+            attn_impl="xla"):
+    from repro.models.transformer import apply_layer
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embedding"], tokens, cd)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    mask = L.AttnMask(causal=True, window=cfg.attn_window)
+
+    # layer pattern is static -> unrolled python loop over gathered slices
+    # would break scan; instead scan with a per-layer selector
+    def body(carry, inputs):
+        lp, idx = inputs
+        h = carry
+        attn_out = apply_layer(lp["attn_block"], h, cfg, positions, mask=mask,
+                               chunk_q=chunk_q, chunk_k=chunk_k,
+                               attn_impl=attn_impl)
+        rec_out, _, _ = apply_rec_block(lp["rec_block"], h, cfg)
+        hy = cfg.hybrid
+        use_attn = (idx % hy.period) == hy.attn_position
+        h = jnp.where(use_attn, attn_out, rec_out)
+        return h, None
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(body_fn, x, (params["layers"], idxs))
+    return L.apply_norm(params["final_norm"], x, "rmsnorm")
+
+
+def init_state(cfg, batch: int, tp: int = 1, dtype=jnp.bfloat16, tp_kv=None):
+    lw = cfg.hybrid.lru_width or cfg.d_model
+    _, KV = cfg.padded_heads(tp, tp_kv)
+    hd = cfg.resolved_head_dim
+    Wd = cfg.hybrid.window
+    Wc = 4
+    return HybridState(
+        lru=jnp.zeros((cfg.n_layers, batch, lw), jnp.float32),
+        conv=jnp.zeros((cfg.n_layers, batch, Wc - 1, lw), dtype),
+        k=jnp.zeros((cfg.n_layers, batch, Wd, KV, hd), dtype),
+        v=jnp.zeros((cfg.n_layers, batch, Wd, KV, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def state_logical_axes():
+    return HybridState(
+        lru=("layers", "batch", "mlp"),
+        conv=("layers", "batch", "conv", "mlp"),
+        k=("layers", "batch", "seq", "kv_heads", "head_dim"),
+        v=("layers", "batch", "seq", "kv_heads", "head_dim"),
+        length=(),
+    )
+
+
+def prefill(params, tokens, cfg, state: HybridState, *, chunk_q=1024,
+            chunk_k=1024, attn_impl="xla"):
+    """Run the prompt, capture per-layer LRU state / conv tail / the last
+    ``window`` K,V at their ring-buffer slots; return last-token logits."""
+    from repro.models import transformer as T
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embedding"], tokens, cd)
+    S = x.shape[1]
+    Wd = cfg.hybrid.window
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    mask = L.AttnMask(causal=True, window=cfg.attn_window)
+    # ring-buffer layout: slot s holds the latest position p < S with
+    # p % Wd == s (static arithmetic — S and Wd are compile-time)
+    slots = jnp.arange(Wd)
+    ring_pos = jnp.where(
+        slots < (S % Wd if Wd else 0),
+        (S - (S % Wd)) + slots,
+        S - Wd - (S % Wd) + slots if S >= Wd else slots,
+    ) if Wd else slots
+    ring_pos = jnp.clip(ring_pos, 0, S - 1)
+    ring_valid = (jnp.arange(Wd) < S) if S < Wd else jnp.ones(Wd, bool)
+
+    def body(carry, scanned):
+        h = carry
+        lp, idx = scanned
+        # attention branch (also computes the cacheable K/V)
+        hn = L.apply_norm(lp["attn_block"]["ln1"], h, cfg.norm)
+        q, k, v = L.qkv(lp["attn_block"]["attn"], hn, cfg, positions)
+        o = L.attention(q, k, v, mask, impl=attn_impl,
+                        chunk_q=min(chunk_q, S), chunk_k=min(chunk_k, S))
+        ah = h + L.attn_out(lp["attn_block"]["attn"], o)
+        hn2 = L.apply_norm(lp["attn_block"]["ln2"], ah, cfg.norm)
+        ah = ah + L.apply_mlp(lp["attn_block"]["mlp"], hn2, cfg.act)
+        kc = jnp.where(ring_valid[None, :, None, None], k[:, ring_pos], 0)
+        vc = jnp.where(ring_valid[None, :, None, None], v[:, ring_pos], 0)
+        # recurrent branch
+        rh, lru, cv = apply_rec_block(lp["rec_block"], h, cfg)
+        hy = cfg.hybrid
+        use_attn = (idx % hy.period) == hy.attn_position
+        h = jnp.where(use_attn, ah, rh)
+        return h, (lru, cv.astype(jnp.bfloat16), kc.astype(jnp.bfloat16),
+                   vc.astype(jnp.bfloat16))
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (lru_n, cv_n, k_n, v_n) = lax.scan(body_fn, x, (params["layers"], idxs))
+    h = L.apply_norm(params["final_norm"], x[:, -1:], "rmsnorm")
+    logits = T.logits_from_hidden(params, h, cfg)
+    return logits[:, 0], HybridState(
+        lru_n, cv_n.astype(state.conv.dtype), k_n.astype(state.k.dtype),
+        v_n.astype(state.v.dtype), jnp.int32(S)
+    )
+
+
+def decode_step(params, state: HybridState, token, cfg):
+    """Rolling-window decode: attention caches hold the last `window`
+    positions (ring buffer via roll-free modular write)."""
+    from repro.models import transformer as T
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embedding"], token, cd)
+    Wd = cfg.hybrid.window
+    pos = state.length                       # absolute position of new token
+    slot = pos % Wd
+
+    def body(carry, scanned):
+        h = carry
+        lp, lru, cv, kc, vc, idx = scanned
+        # attention path (ring-buffer cache)
+        hn = L.apply_norm(lp["attn_block"]["ln1"], h, cfg.norm)
+        q, k, v = L.qkv(lp["attn_block"]["attn"], hn, cfg, pos[None, None])
+        kc2 = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+        vc2 = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+        n_valid = jnp.minimum(pos + 1, Wd)
+        s = L._gqa_scores(q, kc2) / jnp.sqrt(jnp.float32(q.shape[-1]))
+        kpos = jnp.arange(Wd)
+        vis = kpos < n_valid
+        s = jnp.where(vis[None, None, None, None, :], s, -jnp.inf)
+        o = L._gqa_out(jax.nn.softmax(s.astype(jnp.float32), -1), vc2)
+        attn_h = h + L.attn_out(lp["attn_block"]["attn"], o.astype(cd))
+        hn2 = L.apply_norm(lp["attn_block"]["ln2"], attn_h, cfg.norm)
+        attn_h = attn_h + L.apply_mlp(lp["attn_block"]["mlp"], hn2, cfg.act)
+        # recurrent path
+        rec_h, lru2, cv2 = apply_rec_block(lp["rec_block"], h, cfg,
+                                           state=lru, conv_tail=cv)
+        hy = cfg.hybrid
+        use_attn = (idx % hy.period) == hy.attn_position
+        h = jnp.where(use_attn, attn_h, rec_h)
+        lru2 = jnp.where(use_attn, lru, lru2)
+        return h, (lru2, cv2, kc2, vc2)
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    x, (lru_n, cv_n, k_n, v_n) = lax.scan(
+        body, x, (params["layers"], state.lru, state.conv, state.k, state.v, idxs)
+    )
+    h = L.apply_norm(params["final_norm"], x, "rmsnorm")
+    logits = T.logits_from_hidden(params, h, cfg)
+    return logits[:, 0], HybridState(lru_n, cv_n, k_n, v_n, state.length + 1)

@@ -1,0 +1,378 @@
+"""Shared transformer building blocks (pure functions over param dicts).
+
+Everything here is jit/eval_shape-friendly and shape-polymorphic over batch
+and sequence.  Attention is *chunked* (two-level scan with online softmax) so
+the compiled program's live memory is O(S·chunk) rather than O(S²) — the
+property the dry-run's memory_analysis must certify for the 32k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.params import Param, ParamBuilder
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(b: ParamBuilder, d: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": b.p((d,), ("embed_no_fsdp",), init="ones")}
+    return {
+        "scale": b.p((d,), ("embed_no_fsdp",), init="ones"),
+        "bias": b.p((d,), ("embed_no_fsdp",), init="zeros"),
+    }
+
+
+def apply_norm(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (full or partial/"2d" — chatglm3 rotates half)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return rot, jnp.asarray(inv)
+
+
+def apply_rope(x, positions, *, fraction: float = 1.0, theta: float = 10_000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    rot, inv = rope_frequencies(d, fraction, theta)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # (..., S, 1, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# chunked attention with online softmax
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnMask:
+    """Positional mask family: causal, optionally windowed, optionally with a
+    bidirectional prefix (PaliGemma) or fully bidirectional (encoder)."""
+
+    causal: bool = True
+    window: Optional[int] = None     # local attention: k > q - window
+    prefix: int = 0                  # first `prefix` kv positions all-visible
+
+    def __call__(self, q_pos, k_pos):
+        ok = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+        if self.causal:
+            vis = k_pos <= q_pos
+            if self.window is not None:
+                vis &= k_pos > q_pos - self.window
+            if self.prefix:
+                vis |= k_pos < self.prefix
+            ok &= vis
+        return ok
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, H, D), k: (B, Sk, KV, D) -> (B, KV, H/KV, Sq, Sk)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, D)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(probs, v):
+    """probs: (B, KV, g, Sq, Sk), v: (B, Sk, KV, D) -> (B, Sq, H, D)."""
+    B, KV, g, Sq, _ = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(probs.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, KV * g, v.shape[-1])
+
+
+def chunked_attention(
+    q, k, v, mask: AttnMask, *,
+    q_offset=0,
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+    causal_skip: bool = False,
+):
+    """Memory-efficient attention: outer scan over query chunks, inner scan
+    over key chunks, online-softmax accumulation.  Never materializes more
+    than (chunk_q x chunk_k) scores per (batch, head).
+
+    causal_skip: statically skip key chunks strictly above the diagonal
+    (valid when q_offset==0 and mask.causal and no prefix) — halves attention
+    FLOPs; the §Perf log measures exactly this switch.
+    """
+    B, S, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    chunk_q = min(chunk_q, S)
+    chunk_k = min(chunk_k, Sk)
+    assert S % chunk_q == 0 and Sk % chunk_k == 0, (S, Sk, chunk_q, chunk_k)
+    nq, nk = S // chunk_q, Sk // chunk_k
+    KV = k.shape[2]
+    g = H // KV
+
+    kc = k.reshape(B, nk, chunk_k, KV, D)
+    vc = v.reshape(B, nk, chunk_k, KV, D)
+
+    def one_q_chunk(qi_static, qblk, nk_eff):
+        """qblk: (B, chunk_q, H, D); iterate nk_eff key chunks."""
+        q_pos = q_offset + qi_static * chunk_q + jnp.arange(chunk_q)
+
+        def inner(carry, kj):
+            m, l, acc = carry
+            kblk = lax.dynamic_index_in_dim(kc, kj, axis=1, keepdims=False)
+            vblk = lax.dynamic_index_in_dim(vc, kj, axis=1, keepdims=False)
+            k_pos = kj * chunk_k + jnp.arange(chunk_k)
+            s = _gqa_scores(qblk, kblk) * scale          # (B,KV,g,cq,ck) f32
+            ok = mask(q_pos[:, None], k_pos[None, :])    # (cq, ck)
+            s = jnp.where(ok[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(ok[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, g, chunk_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, g, chunk_q, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            lambda c, kj: inner(c, kj), (m0, l0, a0),
+            jnp.arange(nk_eff, dtype=jnp.int32),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, chunk_q, H, D)
+
+    skip_ok = causal_skip and mask.causal and mask.prefix == 0 and (
+        isinstance(q_offset, int) and q_offset == 0 and S == Sk and nq == nk
+    )
+    if skip_ok:
+        # static triangular schedule: q chunk i sees key chunks [0, i]
+        outs = []
+        for qi in range(nq):
+            qblk = lax.dynamic_slice_in_dim(q, qi * chunk_q, chunk_q, axis=1)
+            outs.append(one_q_chunk(qi, qblk, qi + 1))
+        out = jnp.concatenate(outs, axis=1)
+    elif nq == 1:
+        out = one_q_chunk(0, q, nk)
+    else:
+        qr = q.reshape(B, nq, chunk_q, H, D)
+
+        def outer(qi, _):
+            qblk = qr[:, qi]
+            return qi + 1, one_q_chunk_traced(qi, qblk)
+
+        # traced q index variant (mask handles positions dynamically)
+        def one_q_chunk_traced(qi, qblk):
+            q_pos = q_offset + qi * chunk_q + jnp.arange(chunk_q)
+
+            def inner(carry, kj):
+                m, l, acc = carry
+                kblk = lax.dynamic_index_in_dim(kc, kj, axis=1, keepdims=False)
+                vblk = lax.dynamic_index_in_dim(vc, kj, axis=1, keepdims=False)
+                k_pos = kj * chunk_k + jnp.arange(chunk_k)
+                s = _gqa_scores(qblk, kblk) * scale
+                ok = mask(q_pos[:, None], k_pos[None, :])
+                s = jnp.where(ok[None, None, None], s, -jnp.inf)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                p = jnp.exp(s - m_safe[..., None])
+                p = jnp.where(ok[None, None, None], p, 0.0)
+                corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+                l = l * corr + jnp.sum(p, axis=-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bkgqs,bskd->bkgqd", p, vblk.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+                return (m_new, l, acc), None
+
+            m0 = jnp.full((B, KV, g, chunk_q), -jnp.inf, jnp.float32)
+            l0 = jnp.zeros((B, KV, g, chunk_q), jnp.float32)
+            a0 = jnp.zeros((B, KV, g, chunk_q, D), jnp.float32)
+            (m, l, acc), _ = lax.scan(inner, (m0, l0, a0),
+                                      jnp.arange(nk, dtype=jnp.int32))
+            out = acc / jnp.maximum(l[..., None], 1e-30)
+            return out.transpose(0, 3, 1, 2, 4).reshape(B, chunk_q, H, D)
+
+        _, outs = lax.scan(outer, jnp.int32(0), None, length=nq)
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, mask: AttnMask, *, impl: str = "xla",
+              chunk_q: int = 1024, chunk_k: int = 1024,
+              causal_skip: bool = False, q_offset=0):
+    """Attention dispatcher.
+
+    impl="xla":   pure-JAX chunked online-softmax (baseline — XLA
+                  materializes the (cq x ck) score tiles to HBM).
+    impl="flash": Pallas flash kernel (fwd+bwd in VMEM — the §Perf
+                  optimization; HBM traffic is q+k+v+out only).
+    """
+    if impl == "flash":
+        from repro.kernels import ops
+
+        o = ops.flash_attention(
+            q, k, v, causal=mask.causal, window=mask.window,
+            prefix=mask.prefix, bq=min(512, chunk_q), bk=min(512, chunk_k))
+        return jax.ad_checkpoint.checkpoint_name(o, "attn_out")
+    return chunked_attention(q, k, v, mask, q_offset=q_offset,
+                             chunk_q=chunk_q, chunk_k=chunk_k,
+                             causal_skip=causal_skip)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None, prefix=0):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, Smax, KV, D); cache_len: scalar int —
+    number of valid cache positions (new token already written at
+    cache_len-1).
+    """
+    B, _, H, D = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    scale = 1.0 / np.sqrt(D)
+    s = _gqa_scores(q, k_cache) * scale        # (B, KV, g, 1, Smax)
+    k_pos = jnp.arange(Smax)
+    vis = k_pos < cache_len
+    if window is not None:
+        vis &= (k_pos >= cache_len - window) | (k_pos < prefix)
+    s = jnp.where(vis[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = _gqa_out(p, v_cache)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(b: ParamBuilder, cfg, tp: int = 1, tp_kv: int | None = None):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.padded_heads(tp, tp_kv)
+    p = {
+        "wq": b.p((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": b.p((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": b.p((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": b.p((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = b.p((H, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = b.p((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = b.p((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def qkv(p, x, cfg, positions, *, rope: bool = True):
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if rope:
+        q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(b: ParamBuilder, d: int, f: int, act: str):
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": b.p((d, f), ("embed", "mlp")),
+            "w_up": b.p((d, f), ("embed", "mlp")),
+            "w_down": b.p((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": b.p((d, f), ("embed", "mlp")),
+        "b_up": b.p((f,), ("mlp",), init="zeros"),
+        "w_down": b.p((f, d), ("mlp", "embed")),
+        "b_down": b.p((d,), ("embed_no_fsdp",), init="zeros"),
+    }
+
+
+def apply_mlp(p, x, act: str):
+    cd = x.dtype
+    if act in ("swiglu", "geglu"):
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cd))
+        g = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)
+        h = jax.ad_checkpoint.checkpoint_name(g * up, "mlp_hidden")
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd))
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cd))
+                    + p["b_up"].astype(cd))
+    h = jax.ad_checkpoint.checkpoint_name(h, "mlp_hidden")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd)) + p["b_down"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(b: ParamBuilder, vocab: int, d: int):
+    return {"table": b.p((vocab, d), ("vocab", "embed"), init="embed", scale=0.02)}
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def init_lm_head(b: ParamBuilder, d: int, vocab: int):
+    return {"w": b.p((d, vocab), ("embed", "vocab"), init="normal")}
+
+
+def lm_logits(head, x, *, tied_table=None):
+    if tied_table is not None:
+        return jnp.einsum("bsd,vd->bsv", x, tied_table.astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, head["w"].astype(x.dtype))

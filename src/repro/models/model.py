@@ -1,0 +1,188 @@
+"""Family-dispatched model facade: one object per architecture exposing
+init / loss / prefill / decode, used by the trainer, the server and the
+multi-pod dry-run.
+
+The loss computes cross-entropy in SEQUENCE CHUNKS (scan + remat) so the
+(B, S, vocab) logits tensor — up to 257k-wide for paligemma — is never
+materialized; this is what keeps the dry-run's memory_analysis inside HBM
+for the large-vocab cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import encdec, hybrid, layers as L, ssm, transformer as T, vlm
+from repro.models.config import ModelConfig
+from repro.models.params import logical_axes, values
+
+
+def chunked_cross_entropy(hidden, labels, cfg, params, *, chunk: int = 512):
+    """Mean next-token CE without materializing full logits.
+
+    hidden: (B, S, d) — position t predicts labels[t]; labels: (B, S) int32,
+    -1 = masked.  Returns (mean_nll, token_count).
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nch = S // chunk
+    tied = params["embedding"]["table"] if cfg.tie_embeddings else None
+    head = params.get("head")
+
+    hs = hidden.reshape(B, nch, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nch, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, lab = xs
+        logits = L.lm_logits(head, h, tied_table=tied).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = lab >= 0
+        nll = jnp.where(mask, lse - picked, 0.0)
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mask)), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (tot, cnt), _ = lax.scan(body_fn, (jnp.float32(0), jnp.int32(0)), (hs, ls))
+    return tot / jnp.maximum(cnt, 1), cnt
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    tp: int = 1
+    tp_kv: int | None = None       # kv-head shard degree (decode-opt layout)
+    cache_quant: bool = False      # int8 KV cache (decode cells)
+
+    # ---- parameters -------------------------------------------------------
+    def init(self, rng):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            boxed = ssm.init_mamba(rng, cfg)
+        elif cfg.family == "hybrid":
+            boxed = hybrid.init_hybrid(rng, cfg, self.tp, self.tp_kv)
+        elif cfg.family == "encdec":
+            boxed = encdec.init_encdec(rng, cfg, self.tp, self.tp_kv)
+        elif cfg.family == "vlm":
+            boxed = vlm.init_vlm(rng, cfg, self.tp, self.tp_kv)
+        else:
+            boxed = T.init_transformer(rng, cfg, self.tp, self.tp_kv)
+        return boxed
+
+    def param_axes(self):
+        """Logical-axes tree without allocating parameters (eval_shape)."""
+        boxed = jax.eval_shape(self.init, jax.random.key(0))
+        return logical_axes(boxed)
+
+    def param_shapes(self):
+        boxed = jax.eval_shape(self.init, jax.random.key(0))
+        return jax.tree.map(lambda p: p.value, boxed,
+                            is_leaf=lambda x: hasattr(x, "axes"))
+
+    # ---- training forward / loss -----------------------------------------
+    def hidden(self, params, batch, *, chunk_q=1024, chunk_k=1024,
+               causal_skip=False, attn_impl="xla", remat_policy="full",
+               ssm_chunk=None, ssm_bf16=False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "ssm":
+            return ssm.forward(params, tokens, cfg, chunk=ssm_chunk,
+                               bf16=ssm_bf16)
+        if cfg.family == "hybrid":
+            return hybrid.forward(params, tokens, cfg, chunk_q=chunk_q,
+                                  chunk_k=chunk_k, attn_impl=attn_impl)
+        if cfg.family == "encdec":
+            return encdec.forward(params, tokens, batch["frames"], cfg,
+                                  chunk_q=chunk_q, chunk_k=chunk_k,
+                                  attn_impl=attn_impl)
+        if cfg.family == "vlm":
+            return vlm.forward(params, tokens, batch["patches"], cfg,
+                               chunk_q=chunk_q, chunk_k=chunk_k,
+                               attn_impl=attn_impl)
+        return T.forward(params, tokens, cfg, chunk_q=chunk_q, chunk_k=chunk_k,
+                         causal_skip=causal_skip, attn_impl=attn_impl,
+                         remat_policy=remat_policy)
+
+    def loss(self, params, batch, **fwd_kw):
+        cfg = self.cfg
+        h = self.hidden(params, batch, **fwd_kw)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            h = h[:, cfg.vlm.num_patches:]  # no loss on image positions
+        nll, cnt = chunked_cross_entropy(h, labels, cfg, params)
+        return nll
+
+    # ---- serving -----------------------------------------------------------
+    def init_decode_state(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return ssm.init_state(cfg, batch, dtype)
+        if cfg.family == "hybrid":
+            return hybrid.init_state(cfg, batch, self.tp, dtype,
+                                     tp_kv=self.tp_kv)
+        if cfg.family == "encdec":
+            return encdec.init_cache(cfg, batch, max_len, self.tp, dtype,
+                                     tp_kv=self.tp_kv)
+        if cfg.family == "vlm":
+            max_len += cfg.vlm.num_patches  # cache holds the image prefix too
+        if self.cache_quant:
+            return T.init_quant_cache(cfg, batch, max_len, self.tp,
+                                      tp_kv=self.tp_kv)
+        return T.init_cache(cfg, batch, max_len, self.tp, dtype,
+                            tp_kv=self.tp_kv)
+
+    def decode_state_axes(self):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return ssm.state_logical_axes()
+        if cfg.family == "hybrid":
+            return hybrid.state_logical_axes()
+        if cfg.family == "encdec":
+            return encdec.cache_logical_axes()
+        if self.cache_quant:
+            return T.quant_cache_logical_axes()
+        return T.cache_logical_axes()
+
+    def decode_step(self, params, state, token):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return ssm.decode_step(params, state, token, cfg)
+        if cfg.family == "hybrid":
+            return hybrid.decode_step(params, state, token, cfg)
+        if cfg.family == "encdec":
+            return encdec.decode_step(params, state, token, cfg)
+        return T.decode_step(params, state, token, cfg)
+
+    def prefill(self, params, batch, state, *, chunk_q=1024, chunk_k=1024,
+                attn_impl="xla", ssm_chunk=None, ssm_bf16=False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "ssm":
+            return ssm.prefill(params, tokens, cfg, state, chunk=ssm_chunk)
+        if cfg.family == "hybrid":
+            return hybrid.prefill(params, tokens, cfg, state,
+                                  chunk_q=chunk_q, chunk_k=chunk_k,
+                                  attn_impl=attn_impl)
+        if cfg.family == "encdec":
+            return encdec.prefill(params, tokens, batch["frames"], cfg, state,
+                                  chunk_q=chunk_q, chunk_k=chunk_k,
+                                  attn_impl=attn_impl)
+        if cfg.family == "vlm":
+            return vlm.prefill(params, tokens, batch["patches"], cfg, state,
+                               chunk_q=chunk_q, chunk_k=chunk_k,
+                               attn_impl=attn_impl)
+        return T.prefill(params, tokens, cfg, state, chunk_q=chunk_q,
+                         chunk_k=chunk_k, attn_impl=attn_impl)
+
+
+def build(cfg: ModelConfig, tp: int = 1, **kw) -> Model:
+    return Model(cfg, tp, **kw)

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts block (qwen3-moe 128e top-8, phi3.5-moe 16e top-2).
+
+Formulation: capacity-bounded top-k routing with sort-based dispatch,
+expressed as gathers/scatters + one batched einsum so GSPMD can shard the
+expert dim over ``model`` while tokens stay replicated across it:
+
+  1. router logits -> top-k (expert, prob) per token,
+  2. tokens sorted by expert; each expert keeps its first C tokens
+     (GShard-style capacity C = ceil(topk*N/E)*cf — overflow is dropped),
+  3. gather x rows into an (E, C, d) buffer (E sharded over ``model``:
+     each rank gathers only its experts' rows — no communication because
+     activations are replicated over ``model``),
+  4. batched expert FFN (E,C,d)x(E,d,f) — fully local per rank,
+  5. scatter-add prob-weighted outputs back to (N, d) — GSPMD inserts the
+     psum over ``model``, the same reduction the dense TP mlp needs.
+
+This is the paper's "route work to its owner" pattern (§3.1/§3.2) with the
+expert id as the partitioning key.  An explicit all-to-all dispatch variant
+(tokens sequence-sharded over ``model``, exchanged with the §3.2.6 1-factor
+or XLA schedule) lives in the serve/perf experiments.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import ParamBuilder
+
+
+def init_moe(b: ParamBuilder, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert
+    E = m.num_experts
+    return {
+        "router": b.p((d, E), ("embed_no_fsdp", "expert")),
+        "w_gate": b.p((E, d, f), ("expert", "embed", "expert_mlp")),
+        "w_up": b.p((E, d, f), ("expert", "embed", "expert_mlp")),
+        "w_down": b.p((E, f, d), ("expert", "expert_mlp", "embed")),
+    }
+
+
+def capacity(n_tokens: int, num_experts: int, top_k: int, cf: float) -> int:
+    c = int(math.ceil(top_k * n_tokens / num_experts * cf))
+    return max(8, int(math.ceil(c / 8)) * 8)
+
+
+def apply_moe(p, x, cfg, mesh=None):
+    """x: (B, S, d) -> (B, S, d).  Router in f32 for stable softmax."""
+    m = cfg.moe
+    B, S, d = x.shape
+    N = B * S
+    E, K = m.num_experts, m.top_k
+    C = capacity(N, E, K, m.capacity_factor)
+    xt = x.reshape(N, d)
+
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)              # (N, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- sort-based dispatch: (token, k) pairs ordered by expert ---------
+    flat_e = top_e.reshape(N * K)
+    flat_t = jnp.repeat(jnp.arange(N, dtype=jnp.int32), K)
+    flat_p = top_p.reshape(N * K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, stok, sp = flat_e[order], flat_t[order], flat_p[order]
+    # position of each pair within its expert's run
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype))
+    pos = jnp.arange(N * K, dtype=jnp.int32) - starts[se]
+    keep = pos < C
+    slot = jnp.where(keep, pos, C - 1)
+
+    # (E, C) token ids + probs; dropped pairs scatter to a dead row
+    dest_e = jnp.where(keep, se, E)
+    tok_buf = jnp.zeros((E, C), jnp.int32).at[dest_e, slot].set(stok, mode="drop")
+    prob_buf = jnp.zeros((E, C), jnp.float32).at[dest_e, slot].set(
+        jnp.where(keep, sp, 0.0), mode="drop")
+    valid = jnp.zeros((E, C), bool).at[dest_e, slot].set(keep, mode="drop")
+
+    # ---- expert FFN on gathered tokens (E sharded over `model`) ----------
+    cd = x.dtype
+    xe = xt[tok_buf.reshape(-1)].reshape(E, C, d)
+    xe = jnp.where(valid[..., None], xe, 0)
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(cd))
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(cd))
+    h = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cd))
+    out_e = out_e * prob_buf[..., None].astype(cd)
+
+    # ---- combine: scatter-add back to token order -------------------------
+    y = jnp.zeros((N, d), cd).at[tok_buf.reshape(-1)].add(
+        jnp.where(valid[..., None], out_e, 0).reshape(E * C, d)
+    )
+    return y.reshape(B, S, d)
+
+
+def load_balance_stats(p, x, cfg):
+    """Aux metrics: per-expert load fraction and dropped-token fraction."""
+    m = cfg.moe
+    B, S, d = x.shape
+    N = B * S
+    E, K = m.num_experts, m.top_k
+    C = capacity(N, E, K, m.capacity_factor)
+    logits = jnp.einsum("nd,de->ne", x.reshape(N, d).astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    top_e = jax.lax.top_k(jax.nn.softmax(logits, -1), K)[1]
+    counts = jnp.zeros(E, jnp.int32).at[top_e.reshape(-1)].add(1)
+    dropped = jnp.sum(jnp.maximum(counts - C, 0))
+    return {"expert_load": counts / (N * K), "drop_frac": dropped / (N * K)}

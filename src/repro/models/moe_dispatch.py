@@ -1,0 +1,66 @@
+"""Expert-parallel MoE dispatch over the paper's exchange layer.
+
+The default MoE block (models/moe.py) keeps tokens replicated across the
+``model`` axis and lets each rank gather its experts' tokens locally.  This
+module is the SEQUENCE-SHARDED alternative: tokens are sharded over the
+expert axis, and routing becomes a personalized all-to-all — exactly the
+paper's §3.1 "route work to its owner" with the §3.2.6 schedule selectable
+(fused XLA all-to-all vs the 1-factor ppermute rounds).  Runs inside
+shard_map; used by tests/benchmarks as the explicit-collective variant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import exchange
+
+
+def moe_block_sharded(p, x_local, cfg, *, axis: str = "model",
+                      backend: str = "xla", capacity_factor: float = 2.0):
+    """x_local: (N_local, d) tokens of THIS rank (sequence-sharded).
+    p holds the LOCAL expert shard: w_* (E_local, d, f), router (d, E).
+    Returns (y_local (N_local, d), overflow flag)."""
+    m = cfg.moe
+    P = lax.axis_size(axis)
+    E = m.num_experts
+    E_local = E // P
+    N_local, dm = x_local.shape
+
+    logits = jnp.einsum("nd,de->ne", x_local.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    flat_e = top_e.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(N_local, dtype=jnp.int32), m.top_k)
+    flat_p = top_p.reshape(-1)
+    mask = jnp.ones_like(flat_e, bool)
+    owner = flat_e // E_local
+    cap = int(N_local * m.top_k * capacity_factor // P) + 8
+
+    # ship (expert_id, token_vector) to the expert's owner — the paper's
+    # personalized all-to-all (backend: "xla" | "one_factor")
+    re, rx, rmask, (dest, slot), ovf = exchange.exchange_vectors_by_owner(
+        flat_e, x_local[flat_t], mask, owner, capacity=cap, axis=axis,
+        backend=backend,
+    )
+    # local expert FFN on received tokens
+    local_e = jnp.where(rmask, re % E_local, 0)
+    onehot = jax.nn.one_hot(local_e, E_local, dtype=rx.dtype)
+    # gather each token's expert weights via one-hot contraction
+    wg = jnp.einsum("pce,edf->pcdf", onehot, p["w_gate"].astype(rx.dtype))
+    wu = jnp.einsum("pce,edf->pcdf", onehot, p["w_up"].astype(rx.dtype))
+    wd = jnp.einsum("pce,efd->pcfd", onehot, p["w_down"].astype(rx.dtype))
+    gate = jnp.einsum("pcd,pcdf->pcf", rx, wg)
+    up = jnp.einsum("pcd,pcdf->pcf", rx, wu)
+    out = jnp.einsum("pcf,pcfd->pcd", jax.nn.silu(gate) * up, wd)
+    out = jnp.where(rmask[..., None], out, 0)
+    # ship results back (second personalized all-to-all), weight, combine
+    back = exchange.all_to_all(out, axis, backend=backend)
+    contrib = back[dest, slot] * flat_p[:, None].astype(back.dtype)
+    contrib = jnp.where(mask[:, None], contrib, 0)
+    y = jnp.zeros_like(x_local).at[flat_t].add(contrib.astype(x_local.dtype))
+    return y, ovf

@@ -1,0 +1,74 @@
+"""Ambient (mesh, logical-rules) context for kernel sharding.
+
+GSPMD treats a pallas_call as an opaque op and REPLICATES its operands (the
+dry-run HLO showed the whole int8 cache all-gathered into every chip).  The
+fix is standard: run Pallas kernels inside shard_map so each device executes
+the kernel on its local shard.  The model layers don't carry the mesh, so
+the step builders (launch/cells.py, train/trainer.py, serve/engine.py) set
+it here and ops.py wraps kernels when a mesh is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("mesh_rules",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh, rules=None):
+    from repro.models.sharding import DEFAULT_RULES
+
+    token = _CTX.set((mesh, dict(rules or DEFAULT_RULES)))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current() -> Optional[Tuple]:
+    return _CTX.get()
+
+
+def axes_for(logical: str):
+    """Mesh axes for a logical axis under the current rules (tuple, possibly
+    empty)."""
+    ctx = current()
+    if ctx is None:
+        return ()
+    mesh, rules = ctx
+    tgt = rules.get(logical)
+    if tgt is None:
+        return ()
+    axes = (tgt,) if isinstance(tgt, str) else tuple(tgt)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def fused_bkv_spec():
+    """PartitionSpec entry for the grouped kernels' fused (B*KV) dim:
+    batch axes (outer) then kv axes (inner) — matching the row-major
+    (B, KV) -> B*KV reshape."""
+    axes = axes_for("batch") + axes_for("kv_heads")
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical axes under the ambient context —
+    no-op when no mesh is active.  Used to pin gather/scatter outputs whose
+    sharding GSPMD otherwise resolves with full-rematerialization permutes
+    (the embedding-lookup warnings in the dry-run log)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from repro.models.sharding import resolve
+
+    spec = resolve(tuple(logical_axes), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,94 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD distribution layer).
+
+The production meshes (launch/mesh.py) expose axes:
+  single pod : (data=16, model=16)
+  multi-pod  : (pod=2, data=16, model=16)
+
+Rules (MaxText-style):
+  batch           -> (pod, data)     data parallelism over pods x data rows
+  embed / d_model -> data            FSDP: parameter shards gathered per layer
+  heads/kv_heads/mlp/vocab/expert -> model   tensor/expert parallelism
+  everything else -> replicated
+
+The OLAP engine flattens (data x model) [x pod] into its 1-D ``nodes`` axis —
+the paper's P-node shared-nothing cluster view of the same hardware.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (None = replicated)
+DEFAULT_RULES: dict[str, Optional[str]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",          # fsdp shard of the d_model dim
+    "embed_no_fsdp": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "state": None,
+    "conv": None,
+    "layers": None,           # scanned-stack leading axis
+}
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def resolve(axes: Tuple[Optional[str], ...], mesh: Mesh,
+            rules: dict | None = None) -> P:
+    """Logical axis tuple -> PartitionSpec valid for ``mesh`` (axes absent
+    from the mesh degrade to replicated — e.g. 'pod' on the single-pod
+    mesh, or everything on a single-device test mesh)."""
+    rules = rules or DEFAULT_RULES
+    names = set(mesh.axis_names)
+    spec = []
+    for ax in axes:
+        tgt = rules.get(ax) if ax is not None else None
+        if isinstance(tgt, tuple):
+            tgt = tuple(t for t in tgt if t in names) or None
+            if tgt is not None and len(tgt) == 1:
+                tgt = tgt[0]
+        elif tgt is not None and tgt not in names:
+            tgt = None
+        spec.append(tgt)
+    return P(*spec)
+
+
+def _is_axes_leaf(x) -> bool:
+    """An axes tuple is a plain tuple of axis names/None — NamedTuple pytree
+    nodes (TrainState, KVCache, ...) must NOT match."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def sharding_tree(axes_tree, mesh: Mesh, rules: dict | None = None):
+    """Logical-axes tree -> NamedSharding tree (for in_shardings)."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, resolve(axes, mesh, rules)),
+        axes_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def spec_tree(axes_tree, mesh: Mesh, rules: dict | None = None):
+    return jax.tree.map(
+        lambda axes: resolve(axes, mesh, rules),
+        axes_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def constrain(x, mesh: Mesh, *axes, rules: dict | None = None):
+    """with_sharding_constraint by logical axes (no-op off-mesh)."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(tuple(axes), mesh, rules))
+    )

@@ -1,0 +1,317 @@
+"""Mamba-2 (state-space duality) blocks — mamba2-2.7b.
+
+Chunked SSD: within a chunk the recurrence is computed as a masked
+(attention-like) contraction; across chunks a lax.scan carries the
+(H, P, N) state.  Decode is the O(1) recurrence — the reason this arch
+RUNS the long_500k cell that full-attention archs must skip.
+
+Shapes: d_inner = expand*d_model, H = d_inner/head_dim heads (sharded over
+``model``), N = d_state (replicated), G = 1 B/C group.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.params import ParamBuilder
+
+
+class SSMState(NamedTuple):
+    state: jax.Array     # (layers, B, H, P, N) running SSD state
+    conv: jax.Array      # (layers, B, W-1, di + 2N) conv tail
+    length: jax.Array
+
+
+def dims(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = di // s.head_dim
+    return di, H, s.d_state, s.head_dim, s.conv_width
+
+
+def init_ssm_layer(rng, cfg):
+    b = ParamBuilder(rng)
+    di, H, N, P, W = dims(cfg)
+    d = cfg.d_model
+    return {
+        "norm": L.init_norm(b, d, "rmsnorm"),
+        "w_zx": b.p((d, 2 * di), ("embed", "mlp")),
+        "w_bc": b.p((d, 2 * N), ("embed", None)),
+        "w_dt": b.p((d, H), ("embed", "heads")),
+        "dt_bias": b.p((H,), ("heads",), init="zeros"),
+        "A_log": b.p((H,), ("heads",), init="zeros"),
+        "D": b.p((H,), ("heads",), init="ones"),
+        "conv": b.p((W, di + 2 * N), ("conv", "mlp"), init="normal", scale=0.1),
+        "gated_norm": b.p((di,), ("mlp",), init="ones"),
+        "out_proj": b.p((di, d), ("mlp", "embed")),
+    }
+
+
+def init_mamba(rng, cfg):
+    from repro.models.transformer import stack_layer_params
+
+    r_emb, r_layers, r_norm = jax.random.split(rng, 3)
+    b = ParamBuilder(r_emb)
+    return {
+        "embedding": L.init_embedding(b, cfg.padded_vocab(), cfg.d_model),
+        "layers": stack_layer_params(lambda k: init_ssm_layer(k, cfg), r_layers,
+                                     cfg.n_layers),
+        "final_norm": L.init_norm(ParamBuilder(r_norm), cfg.d_model, "rmsnorm"),
+    }
+
+
+def _causal_conv(x, kernel):
+    """x: (B, S, C); kernel: (W, C) depthwise causal."""
+    W = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for w in range(W):
+        out = out + xp[:, w : w + x.shape[1]] * kernel[w][None, None, :]
+    return out
+
+
+def _fit_chunk(S: int, target: int) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def _segsum_exp(a):
+    """a: (..., Lc) log-decays -> lower-triangular exp(sum a[j+1..i]) matrix
+    of shape (..., Lc, Lc)."""
+    Lc = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # sum over (j, i]
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, state0=None):
+    """SSD scan.  x: (b, S, H, P); dt: (b, S, H); A: (H,) negative;
+    B, C: (b, S, N).  Returns (y (b,S,H,P), final state (b,H,P,N))."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+    a = dtc * A[None, None, None, :]                  # (b,nc,Lc,H) log-decay
+    a_cs = jnp.cumsum(a, axis=2)                      # within-chunk cumsum
+    a_total = a_cs[:, :, -1]                          # (b,nc,H)
+
+    io = x.dtype
+    # intra-chunk: Lmat[b,c,h,i,j] = exp(a_cs[i]-a_cs[j]) for j<=i
+    Lmat = _segsum_exp(a.transpose(0, 1, 3, 2))       # (b,nc,H,Lc,Lc)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    gated = (scores[:, :, None] * Lmat).astype(io)    # (b,nc,H,Lc,Lc)
+    xdt = (xc.astype(jnp.float32) * dtc[..., None]).astype(io)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", gated, xdt,
+                         preferred_element_type=jnp.float32)
+
+    # chunk-final states: sum_j B[j] exp(a_total - a_cs[j]) xdt[j]
+    decay_to_end = jnp.exp(a_total[:, :, None] - a_cs)           # (b,nc,Lc,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc,
+                        decay_to_end.astype(io), xdt,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence
+    s0 = jnp.zeros((b, H, P, N), jnp.float32) if state0 is None else state0
+
+    def step(s_prev, inputs):
+        st, atot = inputs                              # (b,H,P,N), (b,H)
+        s_new = s_prev * jnp.exp(atot)[..., None, None] + st
+        return s_new, s_prev
+
+    sT, s_prevs = lax.scan(
+        step, s0.astype(jnp.float32),
+        (states.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+         a_total.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)        # (b,nc,H,P,N)
+    decay_from_start = jnp.exp(a_cs)                  # (b,nc,Lc,H)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc,
+                         s_prevs.astype(Cc.dtype),
+                         decay_from_start.astype(Cc.dtype),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, sT
+
+
+def apply_ssm_layer(p, x, cfg, *, chunk=None, bf16=False):
+    di, H, N, P, W = dims(cfg)
+    chunk = _fit_chunk(x.shape[1], chunk or cfg.ssm.chunk)
+    cd = x.dtype
+    h = L.apply_norm(p["norm"], x, "rmsnorm")
+    zx = jnp.einsum("bsd,de->bse", h, p["w_zx"].astype(cd))
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = jnp.einsum("bsd,de->bse", h, p["w_bc"].astype(cd))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["w_dt"].astype(cd)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv"].astype(cd)))
+    xin, B, C = (conv_out[..., :di], conv_out[..., di : di + N],
+                 conv_out[..., di + N :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(*xin.shape[:2], H, P)
+    io_dtype = jnp.bfloat16 if bf16 else jnp.float32
+    y, _ = ssd_chunked(xh.astype(io_dtype), dt, A,
+                       B.astype(io_dtype), C.astype(io_dtype), chunk)
+    y = y.astype(jnp.float32)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*xin.shape[:2], di).astype(cd)
+    y = y * jax.nn.silu(z)
+    # gated RMSNorm over d_inner
+    yf = y.astype(jnp.float32)
+    y = (yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["gated_norm"].astype(jnp.float32)).astype(cd)
+    return x + jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+
+
+def forward(params, tokens, cfg, *, chunk=None, bf16=False):
+    cd = jnp.dtype(cfg.compute_dtype)
+    from repro.models import runtime as RT
+
+    x = RT.constrain(L.embed(params["embedding"], tokens, cd),
+                     "batch", None, None)
+
+    def body(carry, lp):
+        return apply_ssm_layer(lp, carry, cfg, chunk=chunk, bf16=bf16), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(body_fn, x, params["layers"])
+    return L.apply_norm(params["final_norm"], x, "rmsnorm")
+
+
+# ---------------------------------------------------------------------------
+# O(1) decode
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32):
+    di, H, N, P, W = dims(cfg)
+    return SSMState(
+        state=jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((cfg.n_layers, batch, W - 1, di + 2 * N), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def state_logical_axes():
+    return SSMState(
+        state=("layers", "batch", "heads", "head_dim", "state"),
+        conv=("layers", "batch", "conv", "mlp"),
+        length=(),
+    )
+
+
+def apply_ssm_decode(p, x, cfg, state, conv_tail):
+    """x: (B, 1, d).  Returns (y, new_state, new_conv_tail)."""
+    di, H, N, P, W = dims(cfg)
+    cd = x.dtype
+    h = L.apply_norm(p["norm"], x, "rmsnorm")
+    zx = jnp.einsum("bsd,de->bse", h, p["w_zx"].astype(cd))
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = jnp.einsum("bsd,de->bse", h, p["w_bc"].astype(cd))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["w_dt"].astype(cd)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )[:, 0]                                            # (B, H)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)      # (B, 1, di+2N)
+    window = jnp.concatenate([conv_tail, conv_in], axis=1)   # (B, W, ·)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, p["conv"].astype(cd))
+    )
+    xin = conv_out[:, :di].reshape(-1, H, P)
+    B_ = conv_out[:, di : di + N].astype(jnp.float32)
+    C_ = conv_out[:, di + N :].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                   # (B, H)
+    xdt = xin.astype(jnp.float32) * dt[..., None]
+    new_state = (state * decay[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xdt, B_))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_)
+    y = y + xin.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, di).astype(cd) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["gated_norm"].astype(jnp.float32)).astype(cd)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    return out, new_state, window[:, 1:]
+
+
+def apply_ssm_layer_prefill(p, x, cfg, *, chunk=None):
+    """Like apply_ssm_layer but also returns (final ssd state, conv tail)."""
+    di, H, N, P, W = dims(cfg)
+    chunk = _fit_chunk(x.shape[1], chunk or cfg.ssm.chunk)
+    cd = x.dtype
+    h = L.apply_norm(p["norm"], x, "rmsnorm")
+    zx = jnp.einsum("bsd,de->bse", h, p["w_zx"].astype(cd))
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = jnp.einsum("bsd,de->bse", h, p["w_bc"].astype(cd))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["w_dt"].astype(cd)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_tail = conv_in[:, -(W - 1):]
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv"].astype(cd)))
+    xin, B, C = (conv_out[..., :di], conv_out[..., di : di + N],
+                 conv_out[..., di + N :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(*xin.shape[:2], H, P)
+    y, sT = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                        B.astype(jnp.float32), C.astype(jnp.float32), chunk)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*xin.shape[:2], di).astype(cd)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["gated_norm"].astype(jnp.float32)).astype(cd)
+    return x + jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd)), sT, conv_tail
+
+
+def prefill(params, tokens, cfg, state: SSMState, *, chunk=None):
+    """Run the prompt, capture per-layer SSD state + conv tail, return
+    last-position logits."""
+    from repro.models.transformer import logits_from_hidden
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embedding"], tokens, cd)
+
+    def body(carry, lp):
+        h, st, cv = apply_ssm_layer_prefill(lp, carry, cfg, chunk=chunk)
+        return h, (st, cv.astype(state.conv.dtype))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (s_new, c_new) = lax.scan(body_fn, x, params["layers"])
+    h = L.apply_norm(params["final_norm"], x[:, -1:], "rmsnorm")
+    logits = logits_from_hidden(params, h, cfg)
+    return logits[:, 0], SSMState(s_new, c_new, jnp.int32(tokens.shape[1]))
+
+
+def decode_step(params, state: SSMState, token, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embedding"], token, cd)
+
+    def body(carry, scanned):
+        h = carry
+        lp, st, cv = scanned
+        h, st, cv = apply_ssm_decode(lp, h, cfg, st, cv)
+        return h, (st, cv)
+
+    x, (s_new, c_new) = lax.scan(body, x, (params["layers"], state.state,
+                                           state.conv))
+    h = L.apply_norm(params["final_norm"], x, "rmsnorm")
+    from repro.models.transformer import logits_from_hidden
+
+    logits = logits_from_hidden(params, h, cfg)
+    return logits[:, 0], SSMState(s_new, c_new, state.length + 1)

@@ -1,0 +1,354 @@
+"""Unified decoder-only transformer (dense GQA + MoE + local-window +
+prefix-LM), scan-over-layers with optional remat.
+
+Covers: yi-34b, qwen2.5-3b (qkv bias), chatglm3-6b (partial rope),
+mistral-nemo-12b, qwen3-moe, phi3.5-moe, the paligemma decoder (prefix) and
+the whisper decoder (via models/encdec.py which reuses these blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L, moe as moe_mod
+from repro.models.params import Param, ParamBuilder, logical_axes, values
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (L, B, Smax, KV, hd)
+    v: jax.Array
+    length: jax.Array  # scalar int32 — valid positions
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(position, head) scales — §Perf decode
+    optimization (cache HBM reads halve vs bf16); layout (L, B, KV, S, hd)
+    so the grouped Pallas decode kernel gets a free reshape."""
+
+    k: jax.Array        # (L, B, KV, Smax, hd) int8
+    v: jax.Array
+    k_scale: jax.Array  # (L, B, KV, Smax) f32
+    v_scale: jax.Array
+    length: jax.Array
+
+
+def stack_layer_params(init_one, rng, n_layers: int):
+    """vmap a per-layer init over layer keys; prepend the 'layers' logical
+    axis to every leaf (the scan dimension)."""
+    keys = jax.random.split(rng, n_layers)
+    stacked = jax.vmap(lambda k: init_one(k))(keys)
+    return jax.tree.map(
+        lambda p: Param(p.value, ("layers",) + p.axes),
+        stacked,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+def init_layer(rng, cfg, tp: int, tp_kv: int | None = None):
+    b = ParamBuilder(rng)
+    p = {
+        "ln1": L.init_norm(b, cfg.d_model, cfg.norm),
+        "attn": L.init_attention(b, cfg, tp, tp_kv),
+        "ln2": L.init_norm(b, cfg.d_model, cfg.norm),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(b, cfg)
+        # phi3.5-style models keep no dense mlp; qwen3-moe neither
+    else:
+        p["mlp"] = L.init_mlp(b, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def init_transformer(rng, cfg, tp: int = 1, tp_kv: int | None = None):
+    r_emb, r_layers, r_head, r_norm = jax.random.split(rng, 4)
+    b = ParamBuilder(r_emb)
+    params = {
+        "embedding": L.init_embedding(b, cfg.padded_vocab(), cfg.d_model),
+        "layers": stack_layer_params(
+            lambda k: init_layer(k, cfg, tp, tp_kv), r_layers, cfg.n_layers
+        ),
+        "final_norm": L.init_norm(ParamBuilder(r_norm), cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_lm_head(
+            ParamBuilder(r_head), cfg.d_model, cfg.padded_vocab()
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _layer_mask(cfg) -> L.AttnMask:
+    window = cfg.attn_window
+    prefix = cfg.vlm.num_patches if (cfg.family == "vlm" and cfg.vlm) else 0
+    return L.AttnMask(causal=True, window=window, prefix=prefix)
+
+
+def apply_layer(p, x, cfg, positions, *, mask=None, chunk_q=1024, chunk_k=1024,
+                causal_skip=False, attn_impl="xla"):
+    mask = mask or _layer_mask(cfg)
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    q, k, v = L.qkv(p["attn"], h, cfg, positions)
+    o = L.attention(q, k, v, mask, impl=attn_impl, chunk_q=chunk_q,
+                    chunk_k=chunk_k, causal_skip=causal_skip)
+    x = x + L.attn_out(p["attn"], o)
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.family == "moe":
+        x = x + moe_mod.apply_moe(p["moe"], h, cfg)
+    else:
+        x = x + L.apply_mlp(p["mlp"], h, cfg.act)
+    return x
+
+
+def apply_layer_decode(p, x, cfg, k_cache, v_cache, cache_len):
+    """One-token decode step for a single layer.
+
+    x: (B, 1, d); caches: (B, Smax, KV, hd).  Returns (x, new_k, new_v) where
+    the caches have the new position written at cache_len - 1.
+    """
+    positions = (cache_len - 1)[None].astype(jnp.int32)  # (1,) broadcast to (B,1)
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    q, k, v = L.qkv(p["attn"], h, cfg, positions[None, :])
+    idx = cache_len - 1
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k, idx, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v, idx, axis=1)
+    prefix = cfg.vlm.num_patches if (cfg.family == "vlm" and cfg.vlm) else 0
+    o = L.decode_attention(q, k_cache, v_cache, cache_len,
+                           window=cfg.attn_window, prefix=prefix)
+    x = x + L.attn_out(p["attn"], o)
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.family == "moe":
+        x = x + moe_mod.apply_moe(p["moe"], h, cfg)
+    else:
+        x = x + L.apply_mlp(p["mlp"], h, cfg.act)
+    return x, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+
+def remat_wrap(body, cfg, remat_policy: str = "full"):
+    """Remat policy for the layer scan:
+      full          — checkpoint everything (lowest memory, 2N recompute)
+      save_hot      — keep mlp hidden + attention outputs (skips the most
+                      expensive recompute dots; ~170 MB/layer/microbatch)
+      none          — no remat (only viable for tiny configs/tests)
+    """
+    if not cfg.remat or remat_policy == "none":
+        return body
+    if remat_policy == "save_hot":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "mlp_hidden", "attn_out")
+        return jax.checkpoint(body, policy=policy)
+    return jax.checkpoint(body)
+
+
+def forward(params, tokens, cfg, *, embeddings=None, mask=None,
+            chunk_q=1024, chunk_k=1024, causal_skip=False, attn_impl="xla",
+            remat_policy="full"):
+    """Training/prefill forward -> final hidden states (B, S, d).
+
+    embeddings: optional (B, S_extra, d) prefix embeddings prepended to the
+    token embeddings (VLM patch embeds / audio frames for enc-dec handled in
+    their own modules).
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    from repro.models import runtime as RT
+
+    x = RT.constrain(L.embed(params["embedding"], tokens, cd),
+                     "batch", None, None)
+    if embeddings is not None:
+        x = jnp.concatenate([embeddings.astype(cd), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(carry, lp):
+        h = apply_layer(lp, carry, cfg, positions, mask=mask,
+                        chunk_q=chunk_q, chunk_k=chunk_k,
+                        causal_skip=causal_skip, attn_impl=attn_impl)
+        return h, None
+
+    body_fn = remat_wrap(body, cfg, remat_policy)
+    x, _ = lax.scan(body_fn, x, params["layers"])
+    return L.apply_norm(params["final_norm"], x, cfg.norm)
+
+
+def logits_from_hidden(params, hidden, cfg):
+    tied = params["embedding"]["table"] if cfg.tie_embeddings else None
+    head = params.get("head")
+    return L.lm_logits(head, hidden, tied_table=tied)
+
+
+def init_cache(cfg, batch: int, max_len: int, tp: int = 1, dtype=jnp.bfloat16,
+               tp_kv: int | None = None):
+    _, KV = cfg.padded_heads(tp, tp_kv)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, KV, hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_logical_axes():
+    return KVCache(
+        k=("layers", "batch", "seq", "kv_heads", "head_dim"),
+        v=("layers", "batch", "seq", "kv_heads", "head_dim"),
+        length=(),
+    )
+
+
+def init_quant_cache(cfg, batch: int, max_len: int, tp: int = 1,
+                     tp_kv: int | None = None):
+    _, KV = cfg.padded_heads(tp, tp_kv)
+    hd = cfg.resolved_head_dim
+    return QuantKVCache(
+        k=jnp.zeros((cfg.n_layers, batch, KV, max_len, hd), jnp.int8),
+        v=jnp.zeros((cfg.n_layers, batch, KV, max_len, hd), jnp.int8),
+        k_scale=jnp.zeros((cfg.n_layers, batch, KV, max_len), jnp.float32),
+        v_scale=jnp.zeros((cfg.n_layers, batch, KV, max_len), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def quant_cache_logical_axes():
+    kv = ("layers", "batch", "kv_heads", "seq", "head_dim")
+    sc = ("layers", "batch", "kv_heads", "seq")
+    return QuantKVCache(k=kv, v=kv, k_scale=sc, v_scale=sc, length=())
+
+
+def _quantize_kv(x):
+    """x: (B, 1, KV, hd) -> ((B, KV, 1, hd) int8, (B, KV, 1) f32 scale)."""
+    xt = x.transpose(0, 2, 1, 3).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xt), axis=-1) + 1e-8
+    q = jnp.clip(jnp.round(xt / amax[..., None] * 127.0), -127, 127)
+    return q.astype(jnp.int8), (amax / 127.0)
+
+
+def apply_layer_decode_quant(p, x, cfg, kq, ks, vq, vs, cache_len,
+                             interpret_hint=None):
+    """Decode layer against the int8 cache via the Pallas decode kernel."""
+    from repro.kernels.decode_attention import decode_attention as pallas_da
+
+    assert cfg.attn_window is None, "quant decode kernel: no window support"
+    positions = (cache_len - 1)[None].astype(jnp.int32)
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    q, k, v = L.qkv(p["attn"], h, cfg, positions[None, :])
+    idx = cache_len - 1
+    nk, nks = _quantize_kv(k)
+    nv, nvs = _quantize_kv(v)
+    B, KV, Smax, hd = kq.shape
+    kq = lax.dynamic_update_slice(kq, nk, (0, 0, idx, 0))
+    vq = lax.dynamic_update_slice(vq, nv, (0, 0, idx, 0))
+    ks = lax.dynamic_update_slice(ks, nks, (0, 0, idx))
+    vs = lax.dynamic_update_slice(vs, nvs, (0, 0, idx))
+    H = q.shape[2]
+    G = H // KV
+    qg = q[:, 0].reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+
+    def da(qq, kk, vv, kks, vvs, ln):
+        return pallas_da(qq, kk, vv, ln[0], k_scale=kks, v_scale=vvs,
+                         interpret=jax.default_backend() != "tpu")
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import runtime
+
+    ctx = runtime.current()
+    if ctx is not None:
+        bkv = runtime.fused_bkv_spec()
+        da = jax.shard_map(
+            da, mesh=ctx[0],
+            in_specs=(P(bkv, None, None), P(bkv, None, None),
+                      P(bkv, None, None), P(bkv, None), P(bkv, None), P()),
+            out_specs=P(bkv, None, None), check_vma=False)
+    o = da(qg, kq.reshape(B * KV, Smax, hd), vq.reshape(B * KV, Smax, hd),
+           ks.reshape(B * KV, Smax), vs.reshape(B * KV, Smax),
+           cache_len[None])
+    o = o.reshape(B, KV * G, hd)[:, None].reshape(B, 1, H, hd)
+    x = x + L.attn_out(p["attn"], o.astype(x.dtype))
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.family == "moe":
+        x = x + moe_mod.apply_moe(p["moe"], h, cfg)
+    else:
+        x = x + L.apply_mlp(p["mlp"], h, cfg.act)
+    return x, kq, ks, vq, vs
+
+
+def decode_step(params, cache, token, cfg):
+    """One decode step: token (B, 1) int32 -> (logits (B, vocab), new cache).
+    Dispatches on the cache flavor (bf16 baseline vs int8+Pallas)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embedding"], token, cd)
+    new_len = cache.length + 1
+
+    if isinstance(cache, QuantKVCache):
+        def qbody(carry, scanned):
+            h = carry
+            lp, kq, ks, vq, vs = scanned
+            h, kq, ks, vq, vs = apply_layer_decode_quant(
+                lp, h, cfg, kq, ks, vq, vs, new_len)
+            return h, (kq, ks, vq, vs)
+
+        x, (kq, ks, vq, vs) = lax.scan(
+            qbody, x, (params["layers"], cache.k, cache.k_scale,
+                       cache.v, cache.v_scale))
+        h = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = logits_from_hidden(params, h, cfg)
+        return logits[:, 0], QuantKVCache(kq, vq, ks, vs, new_len)
+
+    def body(carry, scanned):
+        h = carry
+        lp, kc, vc = scanned
+        h, kc, vc = apply_layer_decode(lp, h, cfg, kc, vc, new_len)
+        return h, (kc, vc)
+
+    x, (k_new, v_new) = lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = logits_from_hidden(params, h, cfg)
+    return logits[:, 0], KVCache(k_new, v_new, new_len)
+
+
+def prefill(params, tokens, cfg, cache: KVCache, *, embeddings=None,
+            chunk_q=1024, chunk_k=1024, attn_impl="xla"):
+    """Run the full prompt, fill the cache, return last-position logits."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embedding"], tokens, cd)
+    if embeddings is not None:
+        x = jnp.concatenate([embeddings.astype(cd), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    mask = _layer_mask(cfg)
+
+    def body(carry, scanned):
+        h = carry
+        lp, kc, vc = scanned
+        hn = L.apply_norm(lp["ln1"], h, cfg.norm)
+        q, k, v = L.qkv(lp["attn"], hn, cfg, positions)
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), 0, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), 0, axis=1)
+        o = L.attention(q, k, v, mask, impl=attn_impl, chunk_q=chunk_q,
+                        chunk_k=chunk_k)
+        h = h + L.attn_out(lp["attn"], o)
+        hn = L.apply_norm(lp["ln2"], h, cfg.norm)
+        if cfg.family == "moe":
+            h = h + moe_mod.apply_moe(lp["moe"], hn, cfg)
+        else:
+            h = h + L.apply_mlp(lp["mlp"], hn, cfg.act)
+        return h, (kc, vc)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (k_new, v_new) = lax.scan(body_fn, x, (params["layers"], cache.k, cache.v))
+    h = L.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = logits_from_hidden(params, h, cfg)
+    return logits[:, 0], KVCache(k_new, v_new, jnp.int32(S))

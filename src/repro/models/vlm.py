@@ -1,0 +1,59 @@
+"""PaliGemma-3B backbone: gemma decoder with a bidirectional image prefix.
+
+The SigLIP vision tower is a STUB per the brief — ``input_specs`` provides
+precomputed patch embeddings (B, num_patches, patch_dim); this module owns
+only the projection into d_model and the prefix-LM attention pattern
+(bidirectional over the image tokens, causal over text).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L, transformer as T
+from repro.models.params import ParamBuilder
+
+
+def init_vlm(rng, cfg, tp: int = 1, tp_kv: int | None = None):
+    r_proj, r_back = jax.random.split(rng)
+    params = T.init_transformer(r_back, cfg, tp, tp_kv)
+    b = ParamBuilder(r_proj)
+    params["patch_proj"] = {
+        "w": b.p((cfg.vlm.patch_dim, cfg.d_model), (None, "embed")),
+        "b": b.p((cfg.d_model,), ("embed_no_fsdp",), init="zeros"),
+    }
+    return params
+
+
+def project_patches(params, patches, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    pp = params["patch_proj"]
+    return (jnp.einsum("bpe,ed->bpd", patches.astype(cd), pp["w"].astype(cd))
+            + pp["b"].astype(cd))
+
+
+def forward(params, tokens, patches, cfg, *, chunk_q=1024, chunk_k=1024,
+            attn_impl="xla"):
+    """Prefix-LM forward over [image tokens ; text tokens]."""
+    emb = project_patches(params, patches, cfg)
+    S_total = emb.shape[1] + tokens.shape[1]
+    cq = _chunk(S_total, chunk_q)
+    mask = L.AttnMask(causal=True, prefix=cfg.vlm.num_patches)
+    return T.forward(params, tokens, cfg, embeddings=emb, mask=mask,
+                     chunk_q=cq, chunk_k=cq, attn_impl=attn_impl)
+
+
+def _chunk(S: int, target: int) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def prefill(params, tokens, patches, cfg, cache, *, chunk_q=1024,
+            chunk_k=1024, attn_impl="xla"):
+    emb = project_patches(params, patches, cfg)
+    S_total = emb.shape[1] + tokens.shape[1]
+    cq = _chunk(S_total, chunk_q)
+    return T.prefill(params, tokens, cfg, cache, embeddings=emb,
+                     chunk_q=cq, chunk_k=cq, attn_impl=attn_impl)

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_gradients,
+    decompress_gradients,
+    CompressionState,
+)

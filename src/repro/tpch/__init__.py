@@ -1,0 +1,4 @@
+"""TPC-H substrate: deterministic sharded generator, schema/dictionaries,
+and the numpy correctness oracle (paper §4.1)."""
+
+from repro.tpch import dbgen, reference, schema  # noqa: F401

@@ -1,0 +1,75 @@
+"""End-to-end TPC-H driver: generate -> place -> run plan -> check vs oracle.
+
+Used by tests, benchmarks and the serving example; this is the paper's
+"prototype running a subset of TPC-H" in one object.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Cluster, Table
+from repro.core.plans import PLANS
+from repro.tpch import dbgen, reference
+from repro.tpch.schema import DEFAULT_PARAMS
+
+# default fixed-capacity knobs for small/medium scale factors; a production
+# deployment derives them from the §3.2.2 selectivity model (see
+# benchmarks/semijoin_cost.py)
+DEFAULT_CAPACITIES = {
+    "q2_request": 1024,
+    "q2_owner": 1024,
+    "q3_chunk": 256,
+    "q3_rounds": 64,
+    "q5_request": 8192,
+    "q13_route": 8192,
+    "q14_request": 8192,
+    "q15_group": 1024,
+    "q15_candidates": 256,
+    "q21_request": 2048,
+}
+
+
+class TPCHDriver:
+    def __init__(self, sf: float, cluster: Cluster | None = None, seed: int = 0,
+                 capacities=None, backend: str = "xla"):
+        self.cluster = cluster or Cluster()
+        self.sf = sf
+        self.seed = seed
+        self.backend = backend
+        self.capacities = dict(DEFAULT_CAPACITIES)
+        self.capacities.update(capacities or {})
+        self.tables = dbgen.generate(sf, self.cluster.num_nodes, seed)
+        # pad the supplier key space so §3.2.5 groups divide evenly
+        self._extend_derived_tables()
+        self.placed = {n: self.cluster.load(t) for n, t in self.tables.items()}
+        self.ctx = self.cluster.context(
+            self.placed, self.capacities, backend=backend, scale_factor=sf
+        )
+        self._compiled = {}
+
+    def _extend_derived_tables(self):
+        # q3_repl needs the replicated remote join attribute, built at load
+        # time (paper's 'repl' variant)
+        cust = self.tables["customer"]
+        self.tables["customer_seg_repl"] = Table(
+            "customer_seg_repl",
+            {"c_mktsegment": np.asarray(cust.columns["c_mktsegment"])},
+            replicated=True,
+        )
+
+    def compile(self, name: str):
+        if name not in self._compiled:
+            plan = PLANS[name]
+            self._compiled[name] = self.cluster.compile(plan, self.ctx, self.placed)
+        return self._compiled[name]
+
+    def run(self, name: str):
+        fn = self.compile(name)
+        columns = {n: t.columns for n, t in self.placed.items()}
+        return fn(columns)
+
+    def oracle(self, name: str, **kw):
+        base = name.split("_")[0]
+        if base == "q11":
+            kw.setdefault("sf", self.sf)
+        return reference.ALL[base](self.tables, **kw)

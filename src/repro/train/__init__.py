@@ -1,0 +1,1 @@
+from repro.train.train_step import TrainState, make_train_step, train_state_axes  # noqa: F401

@@ -1,0 +1,101 @@
+"""The training loop: jitted step + checkpoint/restart + heartbeat +
+straggler hooks.  This is the piece `launch/train.py` drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import sharding as SH
+from repro.optim.adamw import AdamWConfig
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import Heartbeat, StragglerMonitor
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step, train_state_axes)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    microbatches: int = 1
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model, data, mesh, opt_cfg: AdamWConfig,
+                 tc: TrainerConfig):
+        self.model = model
+        self.data = data
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg
+        self.tc = tc
+        self.heartbeat = Heartbeat()
+        self.stragglers = StragglerMonitor()
+
+        axes = train_state_axes(model)
+        self.state_shardings = SH.sharding_tree(axes, mesh)
+        self.batch_sharding = {
+            "tokens": NamedSharding(mesh, SH.resolve(("batch", "seq"), mesh)),
+            "labels": NamedSharding(mesh, SH.resolve(("batch", "seq"), mesh)),
+        }
+        step_fn = make_train_step(model, opt_cfg, microbatches=tc.microbatches)
+        self.step_fn = jax.jit(
+            step_fn,
+            in_shardings=(self.state_shardings, self.batch_sharding),
+            out_shardings=(self.state_shardings, None),
+            donate_argnums=(0,),
+        )
+
+    def init_or_restore(self) -> tuple[TrainState, int]:
+        tc = self.tc
+        if tc.checkpoint_dir and ckpt.latest_step(tc.checkpoint_dir) is not None:
+            like = jax.eval_shape(
+                lambda: init_train_state(self.model, jax.random.key(tc.seed))
+            )
+            state, step, _ = ckpt.restore(
+                tc.checkpoint_dir, like, shardings=self.state_shardings
+            )
+            return state, step
+        with jax.default_device(jax.devices()[0]):
+            state = init_train_state(self.model, jax.random.key(tc.seed))
+        state = jax.device_put(state, self.state_shardings)
+        return state, 0
+
+    def run(self, state=None, start_step: int = 0):
+        tc = self.tc
+        if state is None:
+            state, start_step = self.init_or_restore()
+        history = []
+        pending_save = None
+        for step in range(start_step, tc.steps):
+            batch = self.data.device_batch(step)
+            batch = jax.device_put(batch, self.batch_sharding)
+            t0 = time.monotonic()
+            state, metrics = self.step_fn(state, batch)
+            metrics = jax.tree.map(float, jax.device_get(metrics))
+            dt = time.monotonic() - t0
+            self.heartbeat.beat()
+            self.stragglers.record(0, dt)
+            history.append({"step": step + 1, "sec": dt, **metrics})
+            if (step + 1) % tc.log_every == 0:
+                print(f"step {step+1:5d}  loss {metrics['loss']:.4f}  "
+                      f"gnorm {metrics['grad_norm']:.3f}  {dt*1e3:.0f} ms")
+            if tc.checkpoint_dir and (step + 1) % tc.checkpoint_every == 0:
+                if pending_save is not None:
+                    pending_save.join()
+                pending_save = ckpt.save(
+                    tc.checkpoint_dir, state, step + 1,
+                    data_state={"seed": self.data.seed, "next_step": step + 1},
+                    blocking=False,
+                )
+        if pending_save is not None:
+            pending_save.join()
+        return state, history

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: a REDUCED config of each family runs one
+forward + one train step on CPU; outputs must have the right shapes and no
+NaNs.  Full configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.data.synthetic import batch_specs
+from repro.models.model import build
+from repro.models.params import values
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _smoke_batch(cfg, rng):
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size, jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.encdec.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            rng, (B, cfg.vlm.num_patches, cfg.vlm.patch_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_arch(arch, smoke=True)
+    model = build(cfg)
+    params = values(model.init(jax.random.key(0)))
+    batch = _smoke_batch(cfg, jax.random.key(1))
+    h = jax.jit(lambda p, b: model.hidden(p, b, chunk_q=16, chunk_k=16))(
+        params, batch)
+    S_out = S + (cfg.vlm.num_patches if cfg.family == "vlm" else 0)
+    assert h.shape == (B, S_out, cfg.d_model)
+    assert np.isfinite(np.asarray(h, np.float32)).all(), f"{arch}: NaN/Inf hidden"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = get_arch(arch, smoke=True)
+    model = build(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    step = jax.jit(make_train_step(
+        model, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10),
+        fwd_kw=dict(chunk_q=16, chunk_k=16)))
+    batch = _smoke_batch(cfg, jax.random.key(1))
+    new_state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: loss={loss}"
+    assert float(metrics["grad_norm"]) > 0, f"{arch}: zero grads"
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda old, new: float(jnp.sum(jnp.abs(old - new))),
+                     state.params, new_state.params))
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = get_arch(arch, smoke=True)
+    model = build(cfg)
+    params = values(model.init(jax.random.key(0)))
+    state = model.init_decode_state(B, max_len=S, dtype=jnp.float32)
+    if cfg.family == "encdec":
+        # cross cache must be filled before decode
+        from repro.models import encdec
+        frames = jax.random.normal(jax.random.key(2),
+                                   (B, cfg.encdec.enc_seq, cfg.d_model))
+        enc = encdec.encode(params, frames, cfg)
+        state = encdec.fill_cross_cache(params, enc, cfg, state)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(model.decode_step)
+    logits, state = step(params, state, tok)
+    assert logits.shape == (B, cfg.padded_vocab())
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    logits2, state = step(params, state, tok + 1)
+    assert int(state.length) == 2
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-2.7b", "whisper-medium",
+                                  "paligemma-3b", "recurrentgemma-2b"])
+def test_prefill_matches_stepwise_decode(arch):
+    """Prefill(prompt) must agree with token-by-token decode — the cache
+    semantics check (positions, rope, ring buffers, ssd state)."""
+    cfg = get_arch(arch, smoke=True)
+    model = build(cfg)
+    params = values(model.init(jax.random.key(0)))
+    rng = jax.random.key(3)
+    T = 8
+    toks = jax.random.randint(rng, (B, T), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(rng, (B, cfg.encdec.enc_seq,
+                                                  cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(rng, (B, cfg.vlm.num_patches,
+                                                   cfg.vlm.patch_dim))
+    # prefill path
+    st = model.init_decode_state(B, max_len=S, dtype=jnp.float32)
+    logits_p, _ = model.prefill(params, batch, st, chunk_q=8, chunk_k=8)
+    # stepwise path
+    st2 = model.init_decode_state(B, max_len=S, dtype=jnp.float32)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        enc = encdec.encode(params, batch["frames"], cfg)
+        st2 = encdec.fill_cross_cache(params, enc, cfg, st2)
+    if cfg.family == "vlm":
+        # stepwise VLM decode starts after the image prefix — compare the
+        # prefill against itself at reduced chunk as the consistency check
+        logits_p2, _ = model.prefill(params, batch, st, chunk_q=4, chunk_k=4)
+        np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_p2),
+                                   rtol=2e-4, atol=2e-4)
+        return
+    logits_s = None
+    for t in range(T):
+        logits_s, st2 = model.decode_step(params, st2, toks[:, t:t+1])
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32), np.asarray(logits_s, np.float32),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_moe_capacity_and_balance():
+    from repro.models import moe as moe_mod
+
+    cfg = get_arch("qwen3-moe-30b-a3b", smoke=True)
+    model = build(cfg)
+    params = values(model.init(jax.random.key(0)))
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    lp = jax.tree.map(lambda v: v[0], params["layers"])
+    stats = moe_mod.load_balance_stats(lp["moe"], x, cfg)
+    assert float(stats["drop_frac"]) <= 1.0
+    load = np.asarray(stats["expert_load"])
+    np.testing.assert_allclose(load.sum(), 1.0, rtol=1e-5)

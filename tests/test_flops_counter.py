@@ -1,0 +1,76 @@
+"""The roofline instrument itself is load-bearing — test it: exact dot
+FLOPs, scan trip-count multiplication, pallas cost_estimate pickup, and
+the fusion-aware traffic conventions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import flops as FL
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = FL.count(f, a, b)
+    assert c.flops == 2 * 64 * 128 * 32
+    # traffic: both operands + result
+    assert c.traffic == (64 * 128 + 128 * 32 + 64 * 32) * 4
+
+
+def test_scan_multiplies_body():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    c = FL.count(f, x, w)
+    assert c.flops == 7 * 2 * 16 * 16 * 16
+
+
+def test_grad_counts_backward():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    w = jax.ShapeDtypeStruct((32, 8), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+    fwd = FL.count(lambda w, x: loss(w, x), w, x).flops
+    # grad wrt w only: fwd dot + dw dot = 2x
+    gw = FL.count(lambda w, x: jax.grad(loss)(w, x), w, x).flops
+    assert gw == 2 * fwd
+    # grad wrt both args: fwd + dw + dx = 3x
+    gboth = FL.count(lambda w, x: jax.grad(loss, argnums=(0, 1))(w, x),
+                     w, x).flops
+    assert gboth == 3 * fwd
+
+
+def test_pallas_cost_estimate_used():
+    from repro.kernels import ops
+
+    q = jax.ShapeDtypeStruct((2, 64, 4, 16), jnp.float32)
+    k = jax.ShapeDtypeStruct((2, 64, 2, 16), jnp.float32)
+    c = FL.count(lambda q, k, v: ops.flash_attention(q, k, v, bq=32, bk=32),
+                 q, k, k)
+    from repro.kernels.flash_attention import block_pairs
+
+    pairs = 2 * 2 * 2 * block_pairs(64, 64, 32, 32, True, 0)
+    assert c.flops == 4 * pairs * 16
+    # flash property: traffic is q+k+v+out+lse, NOT the score tiles
+    assert c.traffic < (2 * 64 * 4 * 16 * 2 + 2 * 64 * 2 * 16 * 2) * 4 + 4096
+
+
+def test_gather_counts_touched_rows_only():
+    def f(table, idx):
+        return table[idx]
+
+    table = jax.ShapeDtypeStruct((100000, 64), jnp.float32)
+    idx = jax.ShapeDtypeStruct((8,), jnp.int32)
+    c = FL.count(f, table, idx)
+    assert c.traffic <= 8 * 64 * 4 + 8 * 4 + 64  # rows + indices, NOT the table

@@ -1,0 +1,152 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs the pure-jnp
+oracle in kernels/ref.py, swept over shapes/blocks/dtypes."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import bitset_pack, grouped_agg, mbit_codec, ref, topk_select
+
+
+# ---------------------------------------------------------------------------
+# grouped_agg: fused filter + one-hot aggregation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 7, 100, 256, 1000])
+@pytest.mark.parametrize("c", [1, 6])
+@pytest.mark.parametrize("g", [1, 6, 32])
+def test_grouped_agg_shapes(n, c, g):
+    rng = np.random.default_rng(n * 100 + c * 10 + g)
+    measures = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+    groups = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+    pred = jnp.asarray(rng.integers(0, 100, n).astype(np.int32))
+    out = grouped_agg.filtered_group_sum(
+        measures, groups, pred, cutoff=50, num_groups=g, block=128, interpret=True
+    )
+    expect = ref.filtered_group_sum(measures, groups, pred, 50, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [64, 256, 2048])
+def test_grouped_agg_blocks(block):
+    rng = np.random.default_rng(0)
+    n, c, g = 777, 6, 6
+    measures = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+    groups = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+    pred = jnp.asarray(rng.integers(0, 100, n).astype(np.int32))
+    out = grouped_agg.filtered_group_sum(
+        measures, groups, pred, cutoff=30, num_groups=g, block=block, interpret=True
+    )
+    expect = ref.filtered_group_sum(measures, groups, pred, 30, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_agg_all_filtered():
+    n, c, g = 100, 3, 4
+    measures = jnp.ones((n, c), jnp.float32)
+    groups = jnp.zeros(n, jnp.int32)
+    pred = jnp.full(n, 99, jnp.int32)
+    out = grouped_agg.filtered_group_sum(
+        measures, groups, pred, cutoff=0, num_groups=g, block=64, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((g, c), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# topk_select: block top-k via masked argmax sweeps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [5, 64, 500, 4096])
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_block_topk(n, k):
+    rng = np.random.default_rng(n + k)
+    values = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    keys = jnp.arange(n, dtype=jnp.int32)
+    out_v, out_k = topk_select.block_topk(values, keys, k, block=256, interpret=True)
+    ref_v, ref_k = ref.block_topk(values, keys, k, block=256)
+    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(ref_k))
+
+
+def test_block_topk_mask_and_ties():
+    values = jnp.asarray([3.0, 3.0, 1.0, 3.0, 2.0, 2.0], jnp.float32)
+    keys = jnp.arange(6, dtype=jnp.int32)
+    mask = jnp.asarray([True, True, True, False, True, True])
+    out_v, out_k = topk_select.block_topk(values, keys, 3, mask, block=8, interpret=True)
+    # ties break toward the smaller key; masked row 3 never wins
+    np.testing.assert_allclose(np.asarray(out_v)[0], [3.0, 3.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(out_k)[0], [0, 1, 4])
+
+
+# ---------------------------------------------------------------------------
+# bitset_pack: predicate -> packed words
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [32, 33, 100, 8192, 10000])
+def test_predicate_bitset(n):
+    rng = np.random.default_rng(n)
+    col = jnp.asarray(rng.integers(0, 5, n).astype(np.int32))
+    words = bitset_pack.predicate_bitset(col, 3, block=256, interpret=True)
+    expect = ref.predicate_bitset(col, 3)
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(expect))
+    # probe every bit
+    from repro.core import compression
+
+    bits = compression.unpack_bitset(words, n)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(col) == 3)
+
+
+# ---------------------------------------------------------------------------
+# mbit_codec: m-bit group-offset encode + bound decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [4, 8, 16])
+@pytest.mark.parametrize("group", [32, 64, 256])
+def test_mbit_codec_vs_ref(m, group):
+    rng = np.random.default_rng(m * group)
+    K = group * 8
+    q = jnp.asarray(rng.integers(0, 1 << 30, K).astype(np.uint32))
+    words, shifts = mbit_codec.encode(q, m, group, interpret=True)
+    ref_words, ref_shifts = ref.mbit_encode(q, m, group)
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(ref_words))
+    np.testing.assert_array_equal(np.asarray(shifts), np.asarray(ref_shifts))
+
+
+@pytest.mark.parametrize("m", [4, 8, 16])
+def test_mbit_bounds_contain_value(m):
+    """The §3.2.5 safety invariant: lower <= q <= upper for every key."""
+    rng = np.random.default_rng(m)
+    group = 64
+    K = group * 16
+    # mixed magnitudes stress the per-group shift
+    q = np.concatenate([
+        rng.integers(0, 1 << 8, K // 4),
+        rng.integers(0, 1 << 16, K // 4),
+        rng.integers(0, 1 << 24, K // 4),
+        rng.integers(0, 1 << 30, K // 4),
+    ]).astype(np.uint32)
+    rng.shuffle(q)
+    qj = jnp.asarray(q)
+    words, shifts = mbit_codec.encode(qj, m, group, interpret=True)
+    lower, upper = mbit_codec.decode_bounds(words, shifts, m, group)
+    lower, upper = np.asarray(lower), np.asarray(upper)
+    assert (lower <= q).all()
+    assert (q <= upper).all()
+    # and the window is exactly 2^shift - 1 wide
+    s = np.repeat(np.asarray(shifts), group)
+    np.testing.assert_array_equal(upper - lower, (1 << s.astype(np.uint64)) - 1)
+
+
+def test_mbit_small_values_exact():
+    """Values below 2^m need no shift: bounds must be exact."""
+    group = 32
+    q = jnp.asarray(np.arange(group * 4, dtype=np.uint32) % 200)
+    words, shifts = mbit_codec.encode(q, 8, group, interpret=True)
+    lower, upper = mbit_codec.decode_bounds(words, shifts, 8, group)
+    np.testing.assert_array_equal(np.asarray(lower), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(upper), np.asarray(q))

@@ -1,0 +1,180 @@
+"""Property-based tests (hypothesis) for the system's invariants:
+
+- bit-packing roundtrips for every width,
+- delta coding roundtrips on sorted keys,
+- §3.2.5 codec bound safety for arbitrary uint32 inputs,
+- top-k ranking == numpy lexsort oracle for arbitrary floats/ties,
+- §3.2.2 cost model: chooses the argmin of the two analytic costs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression
+from repro.core.topk_approx import decode_bounds, encode_partials
+from repro.core import topk
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# fixed-width bit packing
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    width=st.integers(1, 32),
+    data=st.data(),
+)
+def test_pack_unpack_roundtrip(width, data):
+    n = data.draw(st.integers(1, 200))
+    max_val = (1 << width) - 1 if width < 32 else 0xFFFFFFFF
+    vals = data.draw(
+        st.lists(st.integers(0, max_val), min_size=n, max_size=n)
+    )
+    v = jnp.asarray(np.array(vals, np.uint32))
+    words = compression.pack_bits(v, width)
+    assert words.shape[0] == compression.packed_words(n, width)
+    out = compression.unpack_bits(words, n, width)
+    np.testing.assert_array_equal(np.asarray(out), np.array(vals, np.uint32))
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_delta_roundtrip(data):
+    n = data.draw(st.integers(1, 300))
+    vals = sorted(data.draw(st.lists(st.integers(0, 1 << 30), min_size=n, max_size=n)))
+    v = jnp.asarray(np.array(vals, np.int64))
+    deltas = compression.delta_encode(v)
+    out = compression.delta_decode(deltas)
+    np.testing.assert_array_equal(np.asarray(out), np.array(vals, np.int64))
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_bitset_roundtrip_and_probe(data):
+    nwords = data.draw(st.integers(1, 8))
+    n = nwords * 32
+    bits = data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    b = jnp.asarray(np.array(bits, bool))
+    words = compression.pack_bitset(b)
+    out = compression.unpack_bitset(words, n)
+    np.testing.assert_array_equal(np.asarray(out), np.array(bits, bool))
+    idx = jnp.asarray(np.arange(n, dtype=np.int32))
+    probed = compression.probe_bitset(words, idx)
+    np.testing.assert_array_equal(np.asarray(probed), np.array(bits, bool))
+
+
+# ---------------------------------------------------------------------------
+# §3.2.5 codec bounds are SAFE for arbitrary inputs
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([2, 4, 8, 12, 16]),
+    group=st.sampled_from([4, 16, 64]),
+    data=st.data(),
+)
+def test_encode_bounds_safety(m, group, data):
+    ngroups = data.draw(st.integers(1, 6))
+    K = group * ngroups
+    vals = data.draw(
+        st.lists(st.integers(0, (1 << 31) - 1), min_size=K, max_size=K)
+    )
+    q = jnp.asarray(np.array(vals, np.uint32))
+    codes, shifts = encode_partials(q, m, group)
+    assert (np.asarray(codes) < (1 << m)).all() or m >= 31
+    lower, upper = decode_bounds(codes, shifts, group)
+    lo, hi = np.asarray(lower), np.asarray(upper)
+    qn = np.array(vals, np.uint32)
+    assert (lo <= qn).all(), "lower bound must never exceed the value"
+    assert (qn <= hi).all(), "upper bound must never undercut the value"
+
+
+# ---------------------------------------------------------------------------
+# ranking invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_local_topk_matches_lexsort(data):
+    n = data.draw(st.integers(1, 100))
+    k = data.draw(st.integers(1, 20))
+    # many ties on purpose: values drawn from a tiny set
+    vals = data.draw(
+        st.lists(st.sampled_from([0.0, 1.0, 2.0, -1.0, 1e30, -1e30]),
+                 min_size=n, max_size=n)
+    )
+    v = np.array(vals, np.float32)
+    keys = np.arange(n, dtype=np.int32)
+    out = topk.local_topk(jnp.asarray(v), jnp.asarray(keys), k)
+    order = np.lexsort((keys, -v.astype(np.float64)))[:k]
+    kk = min(k, n)
+    np.testing.assert_array_equal(np.asarray(out.keys)[:kk], keys[order][:kk])
+    np.testing.assert_allclose(np.asarray(out.values)[:kk], v[order][:kk])
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_merge_topk_is_commutative_and_correct(data):
+    k = data.draw(st.integers(1, 10))
+    def draw_topk(tag):
+        vals = sorted(
+            data.draw(st.lists(st.floats(-100, 100, width=32), min_size=k, max_size=k)),
+            reverse=True,
+        )
+        keys = data.draw(
+            st.lists(st.integers(0, 1000), min_size=k, max_size=k, unique=True)
+        )
+        nvalid = data.draw(st.integers(0, k))
+        valid = np.zeros(k, bool)
+        valid[:nvalid] = True
+        v = np.where(valid, np.array(vals, np.float32), -np.inf)
+        return topk.TopK(jnp.asarray(v.astype(np.float32)),
+                         jnp.asarray(np.array(keys, np.int32)),
+                         jnp.asarray(valid))
+
+    a, b = draw_topk("a"), draw_topk("b")
+    ab = topk.merge_topk(a, b)
+    ba = topk.merge_topk(b, a)
+    np.testing.assert_array_equal(np.asarray(ab.valid), np.asarray(ba.valid))
+    nv = int(np.asarray(ab.valid).sum())
+    np.testing.assert_allclose(
+        np.asarray(ab.values)[:nv], np.asarray(ba.values)[:nv]
+    )
+    np.testing.assert_array_equal(np.asarray(ab.keys)[:nv], np.asarray(ba.keys)[:nv])
+    # correctness vs numpy on the union of valid entries
+    av, ak, am = (np.asarray(x) for x in a)
+    bv, bk, bm = (np.asarray(x) for x in b)
+    uv = np.concatenate([av[am], bv[bm]]).astype(np.float64)
+    uk = np.concatenate([ak[am], bk[bm]])
+    order = np.lexsort((uk, -uv))[:k]
+    np.testing.assert_array_equal(np.asarray(ab.keys)[:len(order)], uk[order])
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 10**9),
+    m=st.integers(1, 10**8),
+    gamma=st.floats(1e-6, 1.0 - 1e-6),
+    P=st.sampled_from([2, 16, 128, 512]),
+)
+def test_choose_semijoin_is_argmin(n, m, gamma, P):
+    choice = compression.choose_semijoin(n, m, gamma, P)
+    assert choice in (1, 2)
+    if n / P > m:  # footnote 2: request set exceeds the table — Alt-2 always
+        assert choice == 2
+    else:
+        c1 = compression.alt1_bits(n, m, P)
+        c2 = compression.alt2_bits(m, gamma)
+        assert choice == (1 if c1 <= c2 else 2)
