@@ -1,0 +1,16 @@
+# Developer entrypoints.  The full suite takes ~7 minutes on the 8-device
+# CPU mesh; `test-fast` runs the sub-minute tier1 subset (cube subsystem,
+# core distributed primitives, flops counter, property tests).
+
+PYTEST ?= python -m pytest
+
+.PHONY: test test-fast bench-cubes
+
+test:
+	$(PYTEST) -q
+
+test-fast:
+	$(PYTEST) -q -m tier1
+
+bench-cubes:
+	PYTHONPATH=src python -m benchmarks.cube_speedup --sf 0.05

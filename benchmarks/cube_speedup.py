@@ -1,0 +1,84 @@
+"""Two-tier serving economics: rollup-cube build cost vs per-query speedup.
+
+For each cube-served query we compare Tier-1 latency (slice + marginalize
+the pre-built rollup on the host) against the Tier-2 latency of its
+fallback precompiled plan (warm, best-of-N — compile time excluded, so the
+comparison is steady-state serving cost).  The build cost column is what a
+deployment amortizes: ``amortize_after`` is the number of queries at which
+the one-off distributed build pays for itself.
+
+  PYTHONPATH=src python -m benchmarks.cube_speedup --sf 0.05
+
+Tier-1 answers are validated against ``tpch/reference.py`` (Q1) before any
+timing is reported.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.cube.serving import measure_query
+from repro.tpch import cubes as tpch_cubes
+from repro.tpch.driver import TPCHDriver
+
+
+def run(sf: float = 0.05, repeat: int = 20, seed: int = 0):
+    driver = TPCHDriver(sf=sf, seed=seed)
+    t0 = time.perf_counter()
+    driver.build_cubes()
+    build_total = time.perf_counter() - t0
+
+    # correctness gate: tier-1 Q1 must match the float64 oracle
+    q1 = tpch_cubes.q1_query()
+    ans = driver.query(q1)
+    assert ans.tier == 1, "Q1 must be cube-served"
+    np.testing.assert_allclose(
+        np.asarray(ans.value).reshape(6, 6), driver.oracle("q1"), rtol=2e-4
+    )
+
+    rows = []
+    for name, make_query in tpch_cubes.SERVING_QUERIES.items():
+        q = make_query() if callable(make_query) else make_query
+        m = measure_query(driver, q, repeat=repeat)
+        assert m is not None, f"{name} should be cube-covered"
+        route, t1_dt, t2_dt = m["route"], m["tier1_s"], m["tier2_s"]
+        cube = driver.cubes[route.cube.spec.name]
+        rows.append({
+            "query": name,
+            "rollup": "x".join(route.rollup),
+            "cells": route.cells,
+            "tier1_us": t1_dt * 1e6,
+            "tier2_ms": t2_dt * 1e3,
+            # a query with no fallback plan is timed against the q1 full
+            # scan as a representative tier-2 cost — marked as a proxy
+            "tier2_plan": m["plan"] + ("*proxy" if m["proxy"] else ""),
+            "speedup": t2_dt / t1_dt,
+            "build_s": cube.build_seconds,
+            "amortize_after": int(np.ceil(cube.build_seconds / max(t2_dt - t1_dt, 1e-12))),
+        })
+
+    emit("cube_speedup", rows,
+         ["query", "rollup", "cells", "tier1_us", "tier2_ms", "tier2_plan",
+          "speedup", "build_s", "amortize_after"])
+    print(f"\ntotal build time (all cubes, one distributed scan each): "
+          f"{build_total:.2f}s at SF {sf}")
+    worst = min(r["speedup"] for r in rows)
+    print(f"minimum tier-1 speedup over tier-2: {worst:.0f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--sf", type=float, default=0.05)
+    p.add_argument("--repeat", type=int, default=20)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+    run(sf=args.sf, repeat=args.repeat, seed=args.seed)
+    sys.exit(0)

@@ -1,0 +1,75 @@
+"""JAX version compatibility layer.
+
+The codebase targets the current JAX API (``jax.shard_map`` with
+``check_vma``, ``lax.axis_size``, ``jax.make_mesh(..., axis_types=...)``).
+Older installs (<= 0.4.x) expose the same functionality under different
+names (``jax.experimental.shard_map.shard_map`` with ``check_rep``,
+``lax.psum(1, axis)``, ``jax.make_mesh`` without ``axis_types``).
+
+``install()`` — run once from ``repro/__init__`` — fills in the missing
+attributes with thin adapters so every module (and the tests, which call
+``jax.shard_map`` directly) runs unmodified on either API.  Attributes that
+already exist are never touched, so on a current JAX this is a no-op.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+from jax import lax
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` across API generations.
+
+    Newer JAX accepts ``axis_types``; older versions don't have the kwarg
+    (nor ``jax.sharding.AxisType``).  The Auto axis type is the default
+    behaviour everywhere, so dropping the kwarg is semantics-preserving.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and "axis_types" in inspect.signature(
+        jax.make_mesh
+    ).parameters:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def _axis_size(axis_name):
+    """``lax.axis_size`` for JAX versions that predate it: psum of 1 over the
+    named axis (returns the static size under tracing)."""
+    return lax.psum(1, axis_name)
+
+
+def _make_shard_map_adapter(legacy_shard_map):
+    @functools.wraps(legacy_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+        # check_vma (varying-manual-axes check) is the renamed check_rep
+        return legacy_shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_rep=bool(check_vma),
+            **kwargs,
+        )
+
+    return shard_map
+
+
+_installed = False
+
+
+def install():
+    global _installed
+    if _installed:
+        return
+    _installed = True
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _legacy
+
+        jax.shard_map = _make_shard_map_adapter(_legacy)
+    if not hasattr(lax, "axis_size"):
+        lax.axis_size = _axis_size

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.columnar import Table, shard_table
 from repro.core.partitioning import RangePartitioning
 
@@ -45,10 +46,11 @@ class Cluster:
     def __init__(self, devices=None, axis: str = "nodes"):
         devices = list(devices if devices is not None else jax.devices())
         self.axis = axis
-        self.mesh = jax.make_mesh(
+        axis_types = getattr(jax.sharding, "AxisType", None)
+        self.mesh = compat.make_mesh(
             (len(devices),),
             (axis,),
-            axis_types=(jax.sharding.AxisType.Auto,),
+            axis_types=(axis_types.Auto,) if axis_types is not None else None,
             devices=devices,
         )
         self.num_nodes = len(devices)

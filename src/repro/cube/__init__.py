@@ -1,0 +1,15 @@
+"""Two-tier rollup-cube subsystem.
+
+Tier 1: dense rollup cubes, pre-aggregated in ONE distributed scan per cube
+by a precompiled SPMD plan (``build``), served from host memory in
+microseconds (``router``).  Tier 2: the engine's precompiled per-query plans
+over the sharded base tables — the fallback for queries no cube covers.
+
+  spec    CubeSpec / Dimension / Measure declarations
+  build   distributed single-pass builder (shard_map + psum/pmin/pmax)
+  router  query matcher: covering-rollup selection, slice/marginalize, or
+          route to Tier 2
+"""
+from repro.cube.spec import CubeSpec, Dimension, Measure  # noqa: F401
+from repro.cube.build import Cube, build_cube, make_build_plan  # noqa: F401
+from repro.cube.router import AggQuery, CubeRouter, Filter, Route  # noqa: F401

@@ -1,0 +1,202 @@
+"""Tier-1 query router: answer aggregate queries from rollup cubes.
+
+An ``AggQuery`` describes an aggregate query abstractly (group-by dims,
+filters on cube dims, measures).  The router finds the cheapest rollup that
+*covers* the query — contains every grouped/filtered dimension, can express
+every filter exactly, and has every requested measure — then answers it by
+masking + marginalizing the dense rollup array on the host (microseconds;
+no device round-trip).  Queries with no covering rollup return ``None`` and
+the caller falls back to Tier 2, the precompiled SPMD plan over the base
+tables (``TPCHDriver.query``).
+
+Exactness rule for binned dimensions: bin ``j`` covers ``(edges[j-1],
+edges[j]]``, so a range predicate is answerable iff its bound lands on an
+edge (``<= v`` with ``v`` an edge; ``> v`` likewise; integer domains also
+get ``< v`` / ``>= v`` via the ``v - 1`` edge).  Anything else is routed to
+Tier 2 rather than answered approximately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.cube.build import ROWS, Cube
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    """Predicate on one cube dimension.  For categorical dims ``value`` is a
+    dictionary code (or tuple of codes for op "in"); for binned dims it is a
+    raw column value tested against the bin edges."""
+
+    dim: str
+    op: str  # ==, in, <=, <, >=, >
+    value: object
+
+
+@dataclasses.dataclass(frozen=True)
+class AggQuery:
+    """Abstract aggregate query over one table.
+
+    group_by: dimension names, in output-axis order.
+    measures: measure names, stacked on the last output axis.
+    filters: conjunctive predicates on cube dimensions.
+    fallback: Tier-2 plan name (``core.plans.PLANS`` key) to run when no
+        cube covers the query.
+    """
+
+    table: str
+    group_by: tuple
+    measures: tuple
+    filters: tuple = ()
+    fallback: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    cube: Cube
+    rollup: tuple  # ordered dim names of the chosen rollup
+
+    @property
+    def cells(self) -> int:
+        return self.cube.spec.rollup_cells(self.rollup)
+
+
+def _is_int(v) -> bool:
+    return isinstance(v, (int, np.integer))
+
+
+def _filter_mask(dim, flt: Filter):
+    """Boolean mask over ``dim``'s code space, or None if the predicate is
+    not exactly expressible on this dimension's granularity."""
+    card = dim.cardinality
+    codes = np.arange(card)
+    if not dim.binned:
+        v = flt.value
+        if flt.op == "==":
+            return codes == v
+        if flt.op == "in":
+            return np.isin(codes, np.asarray(list(v)))
+        if flt.op == "<=":
+            return codes <= v
+        if flt.op == "<":
+            return codes < v
+        if flt.op == ">=":
+            return codes >= v
+        if flt.op == ">":
+            return codes > v
+        return None
+    # binned: translate the raw bound to an edge index.  Strict bounds are
+    # rewritten through v-1 only on declared-integer domains (on floats,
+    # '< 10' != '<= 9') — otherwise they are inexact and go to Tier 2.
+    edges = np.asarray(dim.edges)
+    op, v = flt.op, flt.value
+    if op == "<" and dim.integral and _is_int(v):
+        op, v = "<=", v - 1
+    if op == ">=" and dim.integral and _is_int(v):
+        op, v = ">", v - 1
+    j = np.searchsorted(edges, v)
+    if j >= len(edges) or edges[j] != v:
+        # the bound cuts INSIDE a bin (including the open first/last bins,
+        # which extend beyond the edge list) — not exact, Tier 2
+        return None
+    if op == "<=":
+        return codes <= j
+    if op == ">":
+        return codes > j
+    return None
+
+
+class CubeRouter:
+    """Match aggregate queries against a set of built cubes."""
+
+    def __init__(self, cubes: Sequence[Cube]):
+        self.cubes = list(cubes)
+
+    def add(self, cube: Cube):
+        self.cubes.append(cube)
+
+    # -- matching -----------------------------------------------------------
+    def route(self, q: AggQuery) -> Optional[Route]:
+        """Cheapest covering (cube, rollup), or None → Tier 2."""
+        needed = set(q.group_by) | {f.dim for f in q.filters}
+        best = None
+        for cube in self.cubes:
+            spec = cube.spec
+            if spec.table != q.table:
+                continue
+            if not set(q.measures) <= set(spec.measure_names):
+                continue
+            if not needed <= set(spec.dim_names):
+                continue
+            if any(_filter_mask(spec.dim(f.dim), f) is None for f in q.filters):
+                continue
+            for rollup in spec.covering_rollups(needed):
+                ordered = tuple(n for n in spec.dim_names if n in rollup)
+                if ordered in cube.rollups:
+                    route = Route(cube, ordered)
+                    if best is None or route.cells < best.cells:
+                        best = route
+                    break  # covering_rollups is sorted; first is cheapest
+        return best
+
+    # -- answering ----------------------------------------------------------
+    def answer(self, q: AggQuery, route: Optional[Route] = None):
+        """Dense result of shape ``(*group_by cardinalities, len(measures))``
+        (float64), or None when no cube covers the query.  Empty min/max
+        cells come back NaN."""
+        route = route or self.route(q)
+        if route is None:
+            return None
+        spec = route.cube.spec
+        arrays = route.cube.rollup(route.rollup)
+        dims = route.rollup
+
+        rows = arrays[ROWS].astype(np.float64)
+        # conjunction of all predicates per dimension (a query may carry
+        # several filters on one dim, e.g. a date window)
+        masks = {}
+        for f in q.filters:
+            m = _filter_mask(spec.dim(f.dim), f)
+            masks[f.dim] = m if f.dim not in masks else masks[f.dim] & m
+
+        def _shaped(mask, axis):
+            shape = [1] * len(dims)
+            shape[axis] = mask.shape[0]
+            return mask.reshape(shape)
+
+        reduce_axes = tuple(i for i, d in enumerate(dims) if d not in q.group_by)
+        rows_f = rows
+        for dname, mask in masks.items():
+            rows_f = rows_f * _shaped(mask, dims.index(dname))
+        rows_out = rows_f.sum(axis=reduce_axes) if reduce_axes else rows_f
+
+        outs = []
+        for mname in q.measures:
+            agg = next(m.agg for m in spec.measures if m.name == mname)
+            arr = arrays[mname].astype(np.float64)
+            for dname, mask in masks.items():
+                m = _shaped(mask, dims.index(dname))
+                if agg in ("sum", "count"):
+                    arr = arr * m
+                else:
+                    fill = np.inf if agg == "min" else -np.inf
+                    arr = np.where(m, arr, fill)
+            if reduce_axes:
+                if agg in ("sum", "count"):
+                    arr = arr.sum(axis=reduce_axes)
+                elif agg == "min":
+                    arr = arr.min(axis=reduce_axes)
+                else:
+                    arr = arr.max(axis=reduce_axes)
+            if agg in ("min", "max"):
+                arr = np.where(rows_out > 0, arr, np.nan)
+            outs.append(arr)
+
+        kept = [d for d in dims if d in q.group_by]
+        stacked = np.stack(outs, axis=-1)
+        # reorder the surviving dim axes to the query's group_by order
+        perm = [kept.index(g) for g in q.group_by]
+        return np.transpose(stacked, perm + [len(kept)])

@@ -185,6 +185,8 @@ def analyze(compiled, chips: int, *, model_flops_global: float = 0.0,
 
     hw = hw or hardware_constants()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older JAX: one dict per program
+        cost = cost[0] if cost else {}
     xla_flops = float(cost.get("flops", 0.0))
     xla_bytes = float(cost.get("bytes accessed", 0.0))
     if xla_bytes == 0.0:

@@ -3,12 +3,43 @@ queries interactively or as a batch (the paper's evaluation driver).
 
   PYTHONPATH=src python -m repro.launch.serve_olap --sf 0.05 \
       --queries q1 q3 q15_approx --repeat 3
+
+--cubes enables two-tier serving: the Tier-1 rollup cubes are materialized
+up front (one distributed scan each) and every cube-covered serving query
+is reported with both its Tier-1 (rollup slice) and Tier-2 (precompiled
+plan) latency.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+
+def _serve_cubes(d, repeat: int):
+    from repro.cube.serving import measure_query
+    from repro.tpch import cubes as tpch_cubes
+
+    t0 = time.monotonic()
+    d.build_cubes()
+    build_s = time.monotonic() - t0
+    for name, cube in d.cubes.items():
+        print(f"cube {name}: {cube.num_values} values from "
+              f"{cube.rows_scanned} rows in {cube.build_seconds:.2f}s")
+    print(f"tier-1 materialization total: {build_s:.2f}s\n")
+
+    print(f"{'query':>22s} {'tier1[us]':>10s} {'tier2[ms]':>10s} {'speedup':>8s}"
+          f"  tier2 plan")
+    for name, make_query in tpch_cubes.SERVING_QUERIES.items():
+        q = make_query()
+        m = measure_query(d, q, repeat=repeat)
+        if m is None:
+            print(f"{name:>22s} {'--':>10s} (not cube-covered; tier 2 only)")
+            continue
+        plan = m["plan"] + (" (proxy: no fallback)" if m["proxy"] else "")
+        print(f"{name:>22s} {m['tier1_s']*1e6:10.1f} {m['tier2_s']*1e3:10.2f} "
+              f"{m['tier2_s']/m['tier1_s']:7.0f}x  {plan}")
+    return 0
 
 
 def main(argv=None):
@@ -18,6 +49,9 @@ def main(argv=None):
     p.add_argument("--repeat", type=int, default=3)
     p.add_argument("--backend", choices=["xla", "one_factor"], default="xla")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--cubes", action="store_true",
+                   help="two-tier mode: build rollup cubes, report tier-1 vs "
+                        "tier-2 latency per serving query")
     args = p.parse_args(argv)
 
     import jax
@@ -27,6 +61,13 @@ def main(argv=None):
     from repro.tpch.driver import TPCHDriver
 
     d = TPCHDriver(sf=args.sf, seed=args.seed, backend=args.backend)
+    if args.cubes:
+        print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
+              f"two-tier serving")
+        if args.queries:
+            print("note: --queries is ignored with --cubes (the fixed "
+                  "tpch.cubes.SERVING_QUERIES set is measured)")
+        return _serve_cubes(d, args.repeat)
     names = args.queries or list(PLANS)
     print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
           f"backend {args.backend}")

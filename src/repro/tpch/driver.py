@@ -5,10 +5,13 @@ Used by tests, benchmarks and the serving example; this is the paper's
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import Cluster, Table
 from repro.core.plans import PLANS
+from repro.cube import AggQuery, CubeRouter, build_cube
 from repro.tpch import dbgen, reference
 from repro.tpch.schema import DEFAULT_PARAMS
 
@@ -29,6 +32,15 @@ DEFAULT_CAPACITIES = {
 }
 
 
+@dataclasses.dataclass
+class QueryAnswer:
+    """Result of router-first execution: which tier served the query."""
+
+    value: object
+    tier: int          # 1 = rollup cube, 2 = precompiled plan
+    source: str        # cube name (tier 1) or plan name (tier 2)
+
+
 class TPCHDriver:
     def __init__(self, sf: float, cluster: Cluster | None = None, seed: int = 0,
                  capacities=None, backend: str = "xla"):
@@ -46,6 +58,8 @@ class TPCHDriver:
             self.placed, self.capacities, backend=backend, scale_factor=sf
         )
         self._compiled = {}
+        self.cubes = {}
+        self.router: CubeRouter | None = None
 
     def _extend_derived_tables(self):
         # q3_repl needs the replicated remote join attribute, built at load
@@ -67,6 +81,41 @@ class TPCHDriver:
         fn = self.compile(name)
         columns = {n: t.columns for n, t in self.placed.items()}
         return fn(columns)
+
+    # -- two-tier execution (repro.cube) -----------------------------------
+    def build_cubes(self, specs=None):
+        """Materialize Tier-1 rollup cubes (one distributed scan per spec)
+        and install the query router.  Defaults to the TPC-H presets."""
+        if specs is None:
+            from repro.tpch import cubes as tpch_cubes
+
+            specs = tpch_cubes.default_specs()
+        for spec in specs:
+            self.cubes[spec.name] = build_cube(
+                self.cluster, self.ctx, self.placed, spec
+            )
+        self.router = CubeRouter(list(self.cubes.values()))
+        return self.cubes
+
+    def query(self, q) -> QueryAnswer:
+        """Router-first execution: serve from the finest covering rollup
+        (Tier 1) when one exists, otherwise run the precompiled plan over
+        the base tables (Tier 2).  ``q`` is an ``AggQuery`` or a plan name."""
+        if isinstance(q, str):
+            return QueryAnswer(self.run(q), tier=2, source=q)
+        if not isinstance(q, AggQuery):
+            raise TypeError(f"query() takes an AggQuery or plan name, got {type(q)}")
+        if self.router is not None:
+            route = self.router.route(q)
+            if route is not None:
+                value = self.router.answer(q, route)
+                return QueryAnswer(value, tier=1, source=route.cube.spec.name)
+        if q.fallback is None:
+            raise LookupError(
+                f"no cube covers the query over {q.table} and it names no "
+                f"Tier-2 fallback plan"
+            )
+        return QueryAnswer(self.run(q.fallback), tier=2, source=q.fallback)
 
     def oracle(self, name: str, **kw):
         base = name.split("_")[0]

@@ -11,6 +11,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+pytestmark = pytest.mark.tier1
+
 from repro.core import exchange, late_materialization, semijoin, topk, topk_approx
 from repro.core.partitioning import RangePartitioning
 

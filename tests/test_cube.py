@@ -1,0 +1,217 @@
+"""Two-tier rollup-cube subsystem: build correctness vs the numpy oracles,
+router coverage/fallback decisions, and marginalization semantics."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.cube import AggQuery, CubeSpec, Dimension, Filter, Measure
+from repro.cube.build import ROWS, build_cube
+from repro.tpch import cubes as tpch_cubes
+from repro.tpch.schema import DEFAULT_PARAMS as DP
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def cubed_driver(tpch_driver):
+    """The shared SF 0.01 driver with the default TPC-H cubes built."""
+    if not tpch_driver.cubes:
+        tpch_driver.build_cubes()
+    return tpch_driver
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 correctness vs tpch/reference.py
+# ---------------------------------------------------------------------------
+
+
+def test_q1_from_cube_matches_oracle(cubed_driver):
+    ans = cubed_driver.query(tpch_cubes.q1_query())
+    assert ans.tier == 1
+    assert ans.source == "lineitem_pricing"
+    got = np.asarray(ans.value).reshape(6, 6)  # group id = returnflag*2 + linestatus
+    ref = cubed_driver.oracle("q1")
+    np.testing.assert_allclose(got, ref, rtol=2e-4)
+
+
+def test_windowed_orders_query_matches_numpy(cubed_driver):
+    ans = cubed_driver.query(tpch_cubes.orders_by_priority_query())
+    assert ans.tier == 1
+    o = cubed_driver.tables["orders"].columns
+    sel = (o["o_orderdate"] >= DP.q4_date_min) & (o["o_orderdate"] < DP.q4_date_max)
+    count = np.bincount(o["o_orderpriority"][sel], minlength=5)
+    total = np.zeros(5)
+    np.add.at(total, o["o_orderpriority"][sel],
+              o["o_totalprice"][sel].astype(np.float64))
+    np.testing.assert_allclose(ans.value[:, 0], count)
+    np.testing.assert_allclose(ans.value[:, 1], total, rtol=1e-5)
+
+
+def test_min_max_measures(cubed_driver):
+    q = AggQuery(
+        table="orders",
+        group_by=("orderstatus",),
+        measures=("min_totalprice", "max_totalprice"),
+        filters=(Filter("ordermonth", ">=", DP.q4_date_min),
+                 Filter("ordermonth", "<", DP.q4_date_max)),
+    )
+    ans = cubed_driver.query(q)
+    assert ans.tier == 1
+    o = cubed_driver.tables["orders"].columns
+    window = (o["o_orderdate"] >= DP.q4_date_min) & (o["o_orderdate"] < DP.q4_date_max)
+    for s in range(3):
+        tp = o["o_totalprice"][window & (o["o_orderstatus"] == s)]
+        np.testing.assert_allclose(ans.value[s, 0], tp.min(), rtol=1e-6)
+        np.testing.assert_allclose(ans.value[s, 1], tp.max(), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# routing decisions
+# ---------------------------------------------------------------------------
+
+
+def test_coarse_rollup_is_preferred(cubed_driver):
+    route = cubed_driver.router.route(tpch_cubes.revenue_by_shipmonth_query())
+    assert route.rollup == ("shipmonth",)  # 86 cells, not the 516-cell finest
+
+
+def test_router_falls_back_for_non_edge_bound(cubed_driver):
+    ans = cubed_driver.query(tpch_cubes.uncovered_query())
+    assert ans.tier == 2
+    assert ans.source == "q1"
+
+
+def test_router_falls_back_below_first_edge(cubed_driver):
+    """A bound inside the open first/last bins cuts a bin in half — never
+    answerable exactly, even though the naive mask would be all-False."""
+    from repro.tpch.schema import day
+
+    for bound in (day(1992, 1, 15), day(1999, 6, 1)):
+        q = AggQuery(table="lineitem", group_by=("returnflag",),
+                     measures=("sum_qty",),
+                     filters=(Filter("shipmonth", "<=", bound),), fallback="q1")
+        assert cubed_driver.router.route(q) is None, bound
+
+
+def test_router_falls_back_for_uncovered_dims(cubed_driver):
+    q = AggQuery(table="lineitem", group_by=("returnflag",),
+                 measures=("sum_qty",),
+                 filters=(Filter("suppkey", "==", 3),), fallback="q1")
+    assert cubed_driver.router.route(q) is None
+    assert cubed_driver.query(q).tier == 2
+
+
+def test_query_without_fallback_raises(cubed_driver):
+    q = AggQuery(table="lineitem", group_by=("returnflag",),
+                 measures=("no_such_measure",))
+    with pytest.raises(LookupError):
+        cubed_driver.query(q)
+
+
+# ---------------------------------------------------------------------------
+# build semantics
+# ---------------------------------------------------------------------------
+
+
+def test_marginalization_equals_coarser_direct_build(cubed_driver):
+    """Summing a dimension out of the finest rollup must equal building the
+    coarser cube directly from the base table."""
+    d = cubed_driver
+    coarse_spec = CubeSpec(
+        name="lineitem_coarse",
+        table="lineitem",
+        dimensions=(
+            Dimension("returnflag", "l_returnflag", 3),
+            Dimension("linestatus", "l_linestatus", 2),
+        ),
+        measures=(
+            Measure("sum_qty", "sum", "l_quantity"),
+            Measure("count_order", "count"),
+        ),
+    )
+    coarse = build_cube(d.cluster, d.ctx, d.placed, coarse_spec)
+    fine = d.cubes["lineitem_pricing"]
+    marg = fine.rollup(("returnflag", "linestatus"))
+    direct = coarse.rollup(("returnflag", "linestatus"))
+    for m in ("sum_qty", "count_order", ROWS):
+        np.testing.assert_allclose(marg[m], direct[m], rtol=1e-5)
+
+
+def test_kernel_method_matches_onehot(cubed_driver):
+    """The fused Pallas grouped-agg path produces the same cube as the
+    one-hot MXU path (interpret mode on CPU)."""
+    d = cubed_driver
+    dims = (
+        Dimension("returnflag", "l_returnflag", 3),
+        Dimension("linestatus", "l_linestatus", 2),
+    )
+    measures = (
+        Measure("sum_qty", "sum", "l_quantity"),
+        Measure("count_order", "count"),
+    )
+    cubes = {}
+    for method in ("onehot", "kernel"):
+        spec = CubeSpec(name=f"li_{method}", table="lineitem",
+                        dimensions=dims, measures=measures, method=method)
+        cubes[method] = build_cube(d.cluster, d.ctx, d.placed, spec)
+    a = cubes["onehot"].rollup(("returnflag", "linestatus"))
+    b = cubes["kernel"].rollup(("returnflag", "linestatus"))
+    for m in ("sum_qty", "count_order"):
+        np.testing.assert_allclose(a[m], b[m], rtol=1e-6)
+
+
+def test_dense_method_matches_onehot(cubed_driver):
+    d = cubed_driver
+    specs = {
+        method: CubeSpec(
+            name=f"orders_{method}", table="orders",
+            dimensions=(Dimension("orderpriority", "o_orderpriority", 5),),
+            measures=(Measure("sum_totalprice", "sum", "o_totalprice"),),
+            method=method,
+        )
+        for method in ("onehot", "dense")
+    }
+    built = {m: build_cube(d.cluster, d.ctx, d.placed, s) for m, s in specs.items()}
+    np.testing.assert_allclose(
+        built["onehot"].rollup(("orderpriority",))["sum_totalprice"],
+        built["dense"].rollup(("orderpriority",))["sum_totalprice"],
+        rtol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation():
+    dim = Dimension("a", "col_a", 4)
+    with pytest.raises(ValueError):
+        CubeSpec("bad", "t", (dim,), (Measure("m", "median", "col"),))
+    with pytest.raises(ValueError):
+        CubeSpec("bad", "t", (dim,),
+                 (Measure("m", "sum", "col"),), rollups=(("nope",),))
+    with pytest.raises(ValueError):
+        Dimension("d", "c")  # no cardinality, no edges
+    spec = CubeSpec("ok", "t", (dim,), (Measure("m", "sum", "col"),),
+                    rollups=((),))
+    # the finest rollup is always materialized, plus the requested scalar one
+    assert spec.rollups == (("a",), ())
+
+
+def test_binned_dimension_codes():
+    d = Dimension("ship", "l_shipdate", edges=(10, 20))
+    assert d.cardinality == 3
+    assert d.binned
+
+
+def test_strict_bounds_require_integral_domain():
+    """'< v' -> '<= v-1' only holds on integer columns; float domains must
+    route strict bounds to Tier 2."""
+    from repro.cube.router import _filter_mask
+
+    f = Filter("x", "<", 11)
+    assert _filter_mask(Dimension("x", "c", edges=(10, 20)), f) is None
+    got = _filter_mask(Dimension("x", "c", edges=(10, 20), integral=True), f)
+    np.testing.assert_array_equal(got, [True, False, False])

@@ -6,8 +6,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.launch import flops as FL
+
+pytestmark = pytest.mark.tier1
 
 
 def test_dot_flops_exact():

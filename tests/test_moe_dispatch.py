@@ -3,6 +3,8 @@ sequence-sharded shard_map variant must reproduce the GSPMD gather-based
 block, with both §3.2.6 schedules."""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,8 +29,12 @@ def test_sharded_dispatch_matches_dense(backend):
     N, d = 64, cfg.d_model
     x = jax.random.normal(jax.random.key(1), (N, d), jnp.float32)
 
-    # reference: the GSPMD gather-based block (capacity ample)
-    ref = moe_mod.apply_moe(lp, x[None], cfg)[0]
+    # reference: the GSPMD gather-based block with capacity genuinely ample
+    # (the default cf=1.25 drops the tail of a popular expert's tokens, which
+    # the all-to-all variant under test correctly keeps)
+    ref_cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    ref = moe_mod.apply_moe(lp, x[None], ref_cfg)[0]
 
     def fn(x_local, router, wg, wu, wd):
         p = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
