@@ -1,6 +1,7 @@
 # Developer entrypoints.  The full suite takes ~7 minutes on the 8-device
 # CPU mesh; `test-fast` runs the sub-minute tier1 subset (cube subsystem,
-# core distributed primitives, flops counter, property tests).
+# query IR + lowering, core distributed primitives, flops counter,
+# property tests).  CI (.github/workflows/ci.yml) runs `make test-fast`.
 
 PYTEST ?= python -m pytest
 

@@ -1,8 +1,9 @@
 """Two-tier serving economics: rollup-cube build cost vs per-query speedup.
 
-For each cube-served query we compare Tier-1 latency (slice + marginalize
-the pre-built rollup on the host) against the Tier-2 latency of its
-fallback precompiled plan (warm, best-of-N — compile time excluded, so the
+For each cube-served IR query we compare Tier-1 latency (slice +
+marginalize the pre-built rollup on the host) against the Tier-2 latency
+of the SAME query as a compiled SPMD plan (hand-written if registered,
+else lowered from the IR; warm, best-of-N — compile time excluded, so the
 comparison is steady-state serving cost).  The build cost column is what a
 deployment amortizes: ``amortize_after`` is the number of queries at which
 the one-off distributed build pays for itself.
@@ -56,9 +57,7 @@ def run(sf: float = 0.05, repeat: int = 20, seed: int = 0):
             "cells": route.cells,
             "tier1_us": t1_dt * 1e6,
             "tier2_ms": t2_dt * 1e3,
-            # a query with no fallback plan is timed against the q1 full
-            # scan as a representative tier-2 cost — marked as a proxy
-            "tier2_plan": m["plan"] + ("*proxy" if m["proxy"] else ""),
+            "tier2_plan": m["plan"],
             "speedup": t2_dt / t1_dt,
             "build_s": cube.build_seconds,
             "amortize_after": int(np.ceil(cube.build_seconds / max(t2_dt - t1_dt, 1e-12))),

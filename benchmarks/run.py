@@ -12,6 +12,10 @@
 | roofline table          | (ours)    | benchmarks.roofline_report  |
 | sampling head ablation  | (ours)    | benchmarks.sampling_bench   |
 | cube tier-1 speedup     | (ours)    | benchmarks.cube_speedup     |
+| lowered-IR overhead     | (ours)    | benchmarks.ir_overhead      |
+
+Every section persists machine-readable JSON under ``experiments/bench/``
+(via ``benchmarks.common.emit``) alongside the printed markdown table.
 """
 from __future__ import annotations
 
@@ -33,13 +37,16 @@ def main(argv=None):
     p.add_argument("--sections", nargs="*", default=None)
     args = p.parse_args(argv)
 
-    from benchmarks import (compiled_speedup, cube_speedup, power_test,
-                            q15_topk, roofline_report, sampling_bench,
-                            semijoin_cost, weak_scaling)
+    from benchmarks import (compiled_speedup, cube_speedup, ir_overhead,
+                            power_test, q15_topk, roofline_report,
+                            sampling_bench, semijoin_cost, weak_scaling)
 
     sections = {
         "cube_speedup": lambda: cube_speedup.run(
             sf=0.02 if args.quick else 0.05),
+        "ir_overhead": lambda: ir_overhead.run(
+            sf=0.02 if args.quick else 0.05,
+            repeat=15 if args.quick else 60),
         "weak_scaling": lambda: weak_scaling.run(repeat=2 if args.quick else 3),
         "q15_topk": lambda: (q15_topk.run(sf=0.01 if args.quick else 0.02),
                              q15_topk.sweep_m(sf=0.01 if args.quick else 0.02)),

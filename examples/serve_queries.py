@@ -14,8 +14,8 @@ import time
 import numpy as np
 
 
-WORKLOAD = ["q1", "q4", "q18", "q3", "q3_lazy", "q14", "q15_approx", "q2",
-            "q5", "q11", "q13", "q21_late"]
+WORKLOAD = ["q1", "q4", "q6", "q18", "q3", "q3_lazy", "q14", "q15_approx",
+            "q2", "q5", "q11", "q13", "q21_late"]
 
 
 def main():

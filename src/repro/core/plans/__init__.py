@@ -1,9 +1,26 @@
-"""Precompiled TPC-H query plans (paper §4.3) — one function per query,
-plus the variants evaluated in the paper's Fig. 2/4 (lazy, repl, late,
-1-factor, approx)."""
+"""Query registry: one ``QueryDef`` per TPC-H query/variant (paper §4.3).
+
+Each entry binds, explicitly:
+
+- ``plan``    the hand-written physical plan function (the escape hatch —
+              one precompiled SPMD function per query, paper §3.2), and/or
+- ``ir``      the declarative Query IR (``repro.query``) that lowers to the
+              same substrate and that the cube router can match, and
+- ``oracle``  the ``repro.tpch.reference`` key this query validates
+              against — an explicit binding, so multi-suffix variants
+              (``q15_1factor``, ``q21_late``) can't silently drift the way
+              the old ``name.split("_")[0]`` munging could.
+
+``PLANS`` remains the name -> hand-plan mapping for callers that want the
+physical layer directly; ``get`` raises a typed :class:`UnknownPlanError`
+instead of a bare ``KeyError``.
+"""
 from __future__ import annotations
 
-from repro.core.plans.local import q1, q1_kernel, q4, q18
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.plans.local import q1, q1_kernel, q4, q6, q18
 from repro.core.plans.semijoin_plans import q2, q3, q3_lazy, q3_repl, q5, q11, q13, q14
 from repro.core.plans.distributed_topk import (
     q15,
@@ -12,23 +29,63 @@ from repro.core.plans.distributed_topk import (
     q21,
     q21_late,
 )
+from repro.query.ir import Query, UnknownPlanError
+from repro.tpch.queries import IR_QUERIES
 
-PLANS = {
-    "q1": q1,
-    "q1_kernel": q1_kernel,
-    "q2": q2,
-    "q3": q3,
-    "q3_lazy": q3_lazy,
-    "q3_repl": q3_repl,
-    "q4": q4,
-    "q5": q5,
-    "q11": q11,
-    "q13": q13,
-    "q14": q14,
-    "q15": q15,
-    "q15_1factor": q15_1factor,
-    "q15_approx": q15_approx,
-    "q18": q18,
-    "q21": q21,
-    "q21_late": q21_late,
+
+@dataclasses.dataclass(frozen=True)
+class QueryDef:
+    """A registered query: physical plan and/or logical IR, plus the
+    explicit oracle binding."""
+
+    name: str
+    oracle: Optional[str]                 # repro.tpch.reference.ALL key
+    plan: Optional[Callable] = None       # hand-written physical plan
+    ir: Optional[Query] = None            # declarative IR (lowerable)
+
+
+def _d(name, oracle, plan=None):
+    return QueryDef(name=name, oracle=oracle, plan=plan,
+                    ir=IR_QUERIES.get(name))
+
+
+REGISTRY = {
+    q.name: q
+    for q in (
+        _d("q1", "q1", q1),
+        _d("q1_kernel", "q1", q1_kernel),
+        _d("q2", "q2", q2),
+        _d("q3", "q3", q3),
+        _d("q3_lazy", "q3", q3_lazy),
+        _d("q3_repl", "q3", q3_repl),
+        _d("q4", "q4", q4),
+        _d("q5", "q5", q5),
+        _d("q6", "q6", q6),
+        _d("q11", "q11", q11),
+        _d("q13", "q13", q13),
+        _d("q14", "q14", q14),
+        # IR-only (no hand plan): the Q14 semi-join shape, exercising the
+        # cost-model alternative choice and derived request capacities
+        _d("q14_promo", None),
+        _d("q15", "q15", q15),
+        _d("q15_1factor", "q15", q15_1factor),
+        _d("q15_approx", "q15", q15_approx),
+        _d("q18", "q18", q18),
+        _d("q21", "q21", q21),
+        _d("q21_late", "q21", q21_late),
+    )
 }
+
+
+def get(name: str) -> QueryDef:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise UnknownPlanError(
+            f"unknown query {name!r}; registered: {sorted(REGISTRY)}"
+        ) from None
+
+
+# physical layer, name -> hand plan (back-compat surface for benchmarks
+# and the serving launcher)
+PLANS = {n: d.plan for n, d in REGISTRY.items() if d.plan is not None}

@@ -1,6 +1,6 @@
 """Queries whose joins are fully local thanks to co-partitioning (paper
-§4.3: Q1, Q4, Q18) — local aggregation + one collective reduce; constant
-weak-scaling runtime in the paper's Fig. 2."""
+§4.3: Q1, Q4, Q18, plus join-free Q6) — local aggregation + one collective
+reduce; constant weak-scaling runtime in the paper's Fig. 2."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -65,6 +65,22 @@ def q1_kernel(ctx, t, p=DP):
         cutoff=int(p.q1_shipdate_max), num_groups=6,
     )
     return lax.psum(local, ctx.axis)
+
+
+def q6(ctx, t, p=DP):
+    """Forecasting revenue change: fully local scan-filter-sum over lineitem
+    plus one scalar psum — the simplest plan shape (and the IR lowering's
+    1-group GroupAgg baseline)."""
+    li = t["lineitem"]
+    sel = (
+        (li["l_shipdate"] >= p.q6_date_min)
+        & (li["l_shipdate"] < p.q6_date_max)
+        & (li["l_discount"] >= p.q6_disc_min)
+        & (li["l_discount"] <= p.q6_disc_max)
+        & (li["l_quantity"] < p.q6_quantity)
+    )
+    rev = li["l_extendedprice"] * li["l_discount"]
+    return lax.psum(jnp.sum(jnp.where(sel, rev, 0.0)), ctx.axis)
 
 
 def q4(ctx, t, p=DP):

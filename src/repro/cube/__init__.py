@@ -12,4 +12,11 @@ over the sharded base tables — the fallback for queries no cube covers.
 """
 from repro.cube.spec import CubeSpec, Dimension, Measure  # noqa: F401
 from repro.cube.build import Cube, build_cube, make_build_plan  # noqa: F401
-from repro.cube.router import AggQuery, CubeRouter, Filter, Route  # noqa: F401
+from repro.cube.router import (  # noqa: F401
+    AggQuery,
+    CubeRouter,
+    Filter,
+    Match,
+    Route,
+    derive_agg_query,
+)

@@ -42,10 +42,17 @@ def _codes(dim, cols):
 
 
 def _measure_values(measure, cols):
+    from repro.query.ir import Expr, eval_expr
+
     if measure.agg == "count":
         n = next(iter(cols.values())).shape[0]
         return jnp.ones(n, jnp.float32)
-    col = measure.column(cols) if callable(measure.column) else cols[measure.column]
+    if isinstance(measure.column, Expr):
+        col = eval_expr(measure.column, cols)
+    elif callable(measure.column):
+        col = measure.column(cols)
+    else:
+        col = cols[measure.column]
     return col.astype(jnp.float32)
 
 

@@ -1,13 +1,16 @@
 """Tier-1 query router: answer aggregate queries from rollup cubes.
 
-An ``AggQuery`` describes an aggregate query abstractly (group-by dims,
-filters on cube dims, measures).  The router finds the cheapest rollup that
-*covers* the query — contains every grouped/filtered dimension, can express
-every filter exactly, and has every requested measure — then answers it by
-masking + marginalizing the dense rollup array on the host (microseconds;
-no device round-trip).  Queries with no covering rollup return ``None`` and
-the caller falls back to Tier 2, the precompiled SPMD plan over the base
-tables (``TPCHDriver.query``).
+The router matches the declarative Query IR directly: a ``GroupAgg`` root
+over ``Filter``/``Project`` chains on a scan is DERIVED into the internal
+``AggQuery`` form per cube spec (group keys -> dimensions by column/edges,
+measures -> spec measures by structural expression equality, filter
+conjuncts -> dimension predicates), then the cheapest covering rollup —
+contains every grouped/filtered dimension, can express every filter
+exactly, has every measure — answers it by masking + marginalizing the
+dense rollup array on the host (microseconds; no device round-trip).
+Queries that derive or route to nothing return ``None`` and the caller
+falls back to Tier 2, the compiled SPMD plan over the base tables
+(``TPCHDriver.query``).
 
 Exactness rule for binned dimensions: bin ``j`` covers ``(edges[j-1],
 edges[j]]``, so a range predicate is answerable iff its bound lands on an
@@ -23,6 +26,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.cube.build import ROWS, Cube
+from repro.cube.spec import Dimension
+from repro.query import ir as qir
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,20 +43,19 @@ class Filter:
 
 @dataclasses.dataclass(frozen=True)
 class AggQuery:
-    """Abstract aggregate query over one table.
+    """The router's internal matched form: an aggregate query named in one
+    spec's dimension/measure vocabulary.  Derived from a ``GroupAgg`` IR
+    root by :func:`derive_agg_query`; can also be built directly in tests.
 
     group_by: dimension names, in output-axis order.
     measures: measure names, stacked on the last output axis.
     filters: conjunctive predicates on cube dimensions.
-    fallback: Tier-2 plan name (``core.plans.PLANS`` key) to run when no
-        cube covers the query.
     """
 
     table: str
     group_by: tuple
     measures: tuple
     filters: tuple = ()
-    fallback: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +66,134 @@ class Route:
     @property
     def cells(self) -> int:
         return self.cube.spec.rollup_cells(self.rollup)
+
+
+@dataclasses.dataclass(frozen=True)
+class Match:
+    """A successful IR->cube match: the derived AggQuery plus its route."""
+
+    query: AggQuery
+    route: Route
+
+
+# ---------------------------------------------------------------------------
+# IR -> AggQuery derivation (per spec)
+# ---------------------------------------------------------------------------
+
+
+def _measure_expr(m) -> Optional[qir.Expr]:
+    """Spec measure as an IR expression, or None if unmatchable (legacy
+    callable measures)."""
+    if isinstance(m.column, qir.Expr):
+        return m.column
+    if isinstance(m.column, str):
+        return qir.Col(m.column)
+    return None
+
+
+def _dim_for_key(spec, key: qir.GroupKey) -> Optional[Dimension]:
+    """Cube dimension matching a group key: plain ``Col`` -> categorical
+    dim of that column with the same cardinality; ``Bin`` -> binned dim of
+    that column with identical edges."""
+    e = key.expr
+    if isinstance(e, qir.Col):
+        for d in spec.dimensions:
+            if d.column == e.name and not d.binned \
+                    and d.cardinality == key.cardinality:
+                return d
+    elif isinstance(e, qir.Bin) and isinstance(e.child, qir.Col):
+        for d in spec.dimensions:
+            if d.column == e.child.name and d.binned \
+                    and d.edges == e.edges:
+                return d
+    return None
+
+
+def _dim_for_column(spec, column: str) -> Optional[Dimension]:
+    for d in spec.dimensions:
+        if d.column == column:
+            return d
+    return None
+
+
+def derive_agg_query(q: "qir.Query", spec) -> Optional[AggQuery]:
+    """Express an IR query in ``spec``'s vocabulary, or None when the query
+    is not cube-shaped for this spec (non-GroupAgg root, operators a cube
+    cannot represent, unknown measures/dimensions)."""
+    root = q.root
+    if not isinstance(root, qir.GroupAgg):
+        return None
+    # walk the chain below the GroupAgg: only Filter/Project over a Scan of
+    # the spec's table are representable; projections are inlined
+    chain = []
+    node = root.child
+    while not isinstance(node, qir.Scan):
+        if not isinstance(node, (qir.Filter, qir.Project)):
+            return None  # SemiJoin/Exists/GroupAggByKey: not cube-shaped
+        chain.append(node)
+        node = node.child
+    if node.table != spec.table:
+        return None
+    # resolve scan-upward so each binding/predicate sees only the
+    # projections BELOW it; stored env entries are fully base-column
+    # expressions, and an upper projection may shadow a lower one
+    filters = []
+    env = {}
+    for op in reversed(chain):
+        if isinstance(op, qir.Filter):
+            filters.append(qir.substitute(op.pred, env) if env else op.pred)
+        else:
+            for name, e in op.cols:
+                env[name] = qir.substitute(e, env) if env else e
+
+    def subst(e):
+        return qir.substitute(e, env) if env else e
+
+    group_by = []
+    for key in root.keys:
+        d = _dim_for_key(spec, dataclasses.replace(key, expr=subst(key.expr))
+                         if env else key)
+        if d is None:
+            return None
+        group_by.append(d.name)
+
+    measures = []
+    for agg in root.aggs:
+        found = None
+        for m in spec.measures:
+            if m.agg != agg.agg:
+                continue
+            if agg.agg == "count" or qir.same_expr(_measure_expr(m),
+                                                   subst(agg.expr)):
+                found = m.name
+                break
+        if found is None:
+            return None
+        measures.append(found)
+
+    dim_filters = []
+    for pred in filters:  # already substituted at collection position
+        for factor in qir.conjuncts(pred):
+            norm = qir.normalize_comparison(factor)
+            if norm is None:
+                return None
+            column, op, value = norm
+            d = _dim_for_column(spec, column)
+            if d is None:
+                return None
+            dim_filters.append(Filter(d.name, op, value))
+
+    return AggQuery(
+        table=spec.table,
+        group_by=tuple(group_by),
+        measures=tuple(measures),
+        filters=tuple(dim_filters),
+    )
+
+
+# ---------------------------------------------------------------------------
+# filter masks over a dimension's code space
+# ---------------------------------------------------------------------------
 
 
 def _is_int(v) -> bool:
@@ -110,7 +242,7 @@ def _filter_mask(dim, flt: Filter):
 
 
 class CubeRouter:
-    """Match aggregate queries against a set of built cubes."""
+    """Match queries (IR or derived AggQuery form) against built cubes."""
 
     def __init__(self, cubes: Sequence[Cube]):
         self.cubes = list(cubes)
@@ -119,27 +251,46 @@ class CubeRouter:
         self.cubes.append(cube)
 
     # -- matching -----------------------------------------------------------
-    def route(self, q: AggQuery) -> Optional[Route]:
-        """Cheapest covering (cube, rollup), or None → Tier 2."""
+    def _match_cube(self, cube: Cube, q: AggQuery) -> Optional[Route]:
+        """Cheapest covering rollup of ONE cube, or None."""
+        spec = cube.spec
+        if spec.table != q.table:
+            return None
+        if not set(q.measures) <= set(spec.measure_names):
+            return None
         needed = set(q.group_by) | {f.dim for f in q.filters}
+        if not needed <= set(spec.dim_names):
+            return None
+        if any(_filter_mask(spec.dim(f.dim), f) is None for f in q.filters):
+            return None
+        for rollup in spec.covering_rollups(needed):
+            ordered = tuple(n for n in spec.dim_names if n in rollup)
+            if ordered in cube.rollups:
+                return Route(cube, ordered)  # sorted; first is cheapest
+        return None
+
+    def route(self, q: AggQuery) -> Optional[Route]:
+        """Cheapest covering (cube, rollup) for a pre-derived AggQuery."""
         best = None
         for cube in self.cubes:
-            spec = cube.spec
-            if spec.table != q.table:
+            route = self._match_cube(cube, q)
+            if route is not None and (best is None or route.cells < best.cells):
+                best = route
+        return best
+
+    def route_query(self, q: "qir.Query") -> Optional[Match]:
+        """Match an IR query: derive the AggQuery per spec (dimension and
+        measure vocabularies differ between cubes), keep the cheapest
+        covering route.  None -> Tier 2."""
+        best = None
+        for cube in self.cubes:
+            aggq = derive_agg_query(q, cube.spec)
+            if aggq is None:
                 continue
-            if not set(q.measures) <= set(spec.measure_names):
-                continue
-            if not needed <= set(spec.dim_names):
-                continue
-            if any(_filter_mask(spec.dim(f.dim), f) is None for f in q.filters):
-                continue
-            for rollup in spec.covering_rollups(needed):
-                ordered = tuple(n for n in spec.dim_names if n in rollup)
-                if ordered in cube.rollups:
-                    route = Route(cube, ordered)
-                    if best is None or route.cells < best.cells:
-                        best = route
-                    break  # covering_rollups is sorted; first is cheapest
+            route = self._match_cube(cube, aggq)
+            if route is not None and (
+                    best is None or route.cells < best.route.cells):
+                best = Match(query=aggq, route=route)
         return best
 
     # -- answering ----------------------------------------------------------

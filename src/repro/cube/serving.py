@@ -1,47 +1,47 @@
 """Shared two-tier measurement protocol.
 
-One implementation of "time Tier 1 vs Tier 2 for a cube query", used by
-both ``launch/serve_olap.py --cubes`` and ``benchmarks/cube_speedup.py``
-so the two reports can't drift.  Tier 1 is the router's host-side rollup
-slice (best-of-N, N floored at 10 because a single slice is microseconds);
-Tier 2 is the query's fallback precompiled plan, warm, best-of-``repeat``.
-A query with no declared fallback is timed against the ``q1`` full-scan
-plan as a REPRESENTATIVE Tier-2 cost — ``proxy`` is True in that case and
-reports must say so.
+One implementation of "time Tier 1 vs Tier 2 for a query", used by both
+``launch/serve_olap.py --cubes`` and ``benchmarks/cube_speedup.py`` so the
+two reports can't drift.  The query is ONE IR object: Tier 1 is the
+router's host-side rollup slice (best-of-N, N floored at 10 because a
+single slice is microseconds); Tier 2 is the SAME query lowered to a
+compiled SPMD plan over the base tables — the path ``driver.query()``
+takes on a cube miss — warm, best-of-``repeat``.
 """
 from __future__ import annotations
 
 import time
 
 
-def measure_query(driver, q, *, repeat: int = 5, proxy_plan: str = "q1"):
-    """Time one cube-covered AggQuery on both tiers.
+def measure_query(driver, q, *, repeat: int = 5):
+    """Time one cube-covered IR query on both tiers.
 
-    Returns ``{"route", "tier1_s", "tier2_s", "plan", "proxy"}``, or None
-    when no rollup covers the query (Tier 2 only — nothing to compare).
+    Returns ``{"route", "tier1_s", "tier2_s", "plan"}``, or None when no
+    rollup covers the query (Tier 2 only — nothing to compare).
     """
     import jax
 
-    route = driver.router.route(q) if driver.router is not None else None
-    if route is None:
+    match = driver.router.route_query(q) if driver.router is not None else None
+    if match is None:
         return None
     cols = {n: t.columns for n, t in driver.placed.items()}
 
-    driver.router.answer(q, route)  # warmup (numpy one-time setup)
-    t1 = min(_clock(lambda: driver.router.answer(q, route))
+    driver.router.answer(match.query, match.route)  # warmup (numpy setup)
+    t1 = min(_clock(lambda: driver.router.answer(match.query, match.route))
              for _ in range(max(repeat, 10)))
 
-    plan = q.fallback or proxy_plan
-    fn = driver.compile(plan)
+    # Tier 2 is the same query lowered to a compiled SPMD plan — exactly
+    # what driver.query() would run on a cube miss
+    fn = driver.compile_query(q)
+    plan_name = f"{q.name or 'ir'} (lowered)"
     jax.block_until_ready(fn(cols))  # warmup (first execute compiles)
     t2 = min(_clock(lambda: jax.block_until_ready(fn(cols)))
              for _ in range(max(repeat, 3)))
     return {
-        "route": route,
+        "route": match.route,
         "tier1_s": t1,
         "tier2_s": t2,
-        "plan": plan,
-        "proxy": q.fallback is None,
+        "plan": plan_name,
     }
 
 

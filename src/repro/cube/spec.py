@@ -62,9 +62,10 @@ AGGS = ("sum", "count", "min", "max")
 class Measure:
     """One aggregate: ``agg(column)`` per cube cell.
 
-    column may be a plain column name or, for derived measures, a callable
-    mapping the local column dict to a value array (e.g. revenue =
-    extendedprice * (1 - discount)).  ``count`` measures ignore the column.
+    column may be a plain column name, a ``repro.query`` expression (the
+    preferred form — the cube router matches IR measures against it
+    structurally), or a legacy callable mapping the local column dict to a
+    value array.  ``count`` measures ignore the column.
     """
 
     name: str

@@ -1,0 +1,50 @@
+"""Declarative Query IR: one logical algebra for every execution tier.
+
+  ir      expression + operator nodes, the ``Q`` builder, catalog,
+          validation, typed errors
+  stats   §3.2.2 selectivity model and derived exchange capacities
+  lower   IR -> physical SPMD plan (compiled by ``Cluster.compile``)
+
+A single ``Query`` object routes to a Tier-1 rollup slice (the cube router
+matches ``GroupAgg`` roots directly), a registered hand-written plan, or a
+freshly lowered SPMD executable — see ``repro.tpch.driver.TPCHDriver.query``.
+"""
+from repro.query.ir import (  # noqa: F401
+    Agg,
+    Bin,
+    BinOp,
+    C,
+    Catalog,
+    Col,
+    ColumnStats,
+    Exists,
+    Expr,
+    Fetch,
+    Filter,
+    GroupAgg,
+    GroupAggByKey,
+    GroupKey,
+    IRValidationError,
+    Lit,
+    LoweringError,
+    Project,
+    Q,
+    Query,
+    QueryError,
+    Scan,
+    SemiJoin,
+    TopK,
+    UnaryOp,
+    UncoveredQueryError,
+    UnknownPlanError,
+    build_catalog,
+    conjuncts,
+    eval_expr,
+    expr_columns,
+    same_expr,
+    same_node,
+    same_query,
+    substitute,
+    validate,
+)
+from repro.query.lower import lower  # noqa: F401

@@ -1,0 +1,406 @@
+"""Lowering pass: logical IR -> physical SPMD plan.
+
+``lower(query, catalog)`` compiles an IR tree into a plan function with the
+engine's standard signature ``plan(ctx, tables)`` — it runs inside
+``shard_map`` over the ``nodes`` axis and synchronizes only through the
+exchange layer, so ``Cluster.compile`` turns it into ONE SPMD executable
+exactly like the hand-written plans (the paper's precompiled query
+function).
+
+Physical mapping:
+
+- ``Filter``/``Project``   -> vectorized column ops on the local partition
+- ``SemiJoin``             -> local probe for co-partitioned edges, else
+  Alt-1 (index-lookup request exchange) or Alt-2 (replicated bitset),
+  chosen by the §3.2.2 cost model; exchange buffer capacities come from the
+  selectivity model (``repro.query.stats``), not hand knobs
+- ``Exists``               -> co-partitioned scatter probe
+- ``GroupAggByKey``        -> dense scatter-add over the parent partition
+- ``GroupAgg``             -> one-hot MXU contraction / dense scatter-add /
+  the fused Pallas ``grouped_agg`` kernel, merged with one ``psum``
+- ``TopK``                 -> per-node top-k + §3.2.3 merging reduction,
+  late-materializing fetch attributes (§3.2.7)
+
+Lowered plans return a dict: ``{"value"}`` for ``GroupAgg`` roots,
+``{"values", "keys", "valid", <fetched attrs>}`` for ``TopK`` roots.  When
+(and only when) the plan contains a request exchange, an ``"overflow"``
+flag is included: True iff a derived buffer capacity was exceeded at run
+time.  The result is then incomplete; recover by re-compiling with an
+explicit capacity override in ``PlanContext.capacities`` under the key
+``"<query-name>_sj<i>"`` (the i-th request semijoin of the chain) — for
+``TPCHDriver``, pass it via the ``capacities=`` constructor argument.
+
+Min/max aggregates are Tier-1-only (rollup cubes serve them); lowering
+them raises :class:`LoweringError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import aggregation, late_materialization, semijoin, topk
+from repro.core.compression import choose_semijoin
+from repro.query import stats as qstats
+from repro.query.ir import (
+    Agg,
+    Bin,
+    BinOp,
+    Catalog,
+    Col,
+    Exists,
+    Filter,
+    GroupAgg,
+    GroupAggByKey,
+    Lit,
+    LoweringError,
+    Project,
+    Query,
+    Scan,
+    SemiJoin,
+    TopK,
+    eval_expr,
+    expr_columns,
+    validate,
+)
+
+ONEHOT_MAX_GROUPS = 8192
+KERNEL_MAX_GROUPS = 512
+
+
+# ---------------------------------------------------------------------------
+# static planning: walk the chain once on the host, fix every runtime knob
+# ---------------------------------------------------------------------------
+
+
+def _chain(root) -> list:
+    """Operator chain scan-first (every operator here is single-child)."""
+    out = []
+    node = root
+    while not isinstance(node, Scan):
+        out.append(node)
+        node = node.child
+    out.append(node)
+    return out[::-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class _SemiJoinPlan:
+    alt: str        # local | request | bitset
+    capacity: int   # derived request-exchange bucket capacity (0 if unused)
+    key: str = ""   # PlanContext.capacities override key ("<name>_sj<i>")
+
+
+def _decide_semijoins(root, catalog: Catalog, query_name=None) -> dict:
+    """Choose each SemiJoin's physical alternative and buffer capacity from
+    the §3.2.2 model, using selectivities accumulated along the chain."""
+    decisions = {}
+    base = None
+    sel = 1.0
+    for node in _chain(root):
+        if isinstance(node, Scan):
+            base = node.table
+            sel = 1.0
+            continue
+        tinfo = catalog.table(base)
+        if isinstance(node, Filter):
+            sel *= qstats.estimate_selectivity(node.pred, tinfo.stats)
+        elif isinstance(node, Exists):
+            sel *= qstats.DEFAULT_SELECTIVITY
+        elif isinstance(node, GroupAggByKey):
+            base = node.into
+            sel = 1.0
+        elif isinstance(node, SemiJoin):
+            target = catalog.table(node.table)
+            gamma = qstats.estimate_selectivity(node.pred, target.stats)
+            edge = catalog.copartitioned.get(base)
+            local_ok = (
+                edge is not None and edge[0] == node.table
+                and isinstance(node.key, Col) and node.key.name == edge[1]
+            )
+            alt = node.alt
+            if alt == "local" and not local_ok:
+                raise LoweringError(
+                    f"semijoin alt='local' requires {node.table!r} "
+                    f"co-partitioned with {base!r} on the key column"
+                )
+            if alt == "auto":
+                if local_ok:
+                    alt = "local"
+                else:
+                    n = tinfo.num_rows * sel          # surviving requests
+                    choice = choose_semijoin(
+                        max(n, 1.0), target.num_rows, max(gamma, 1e-9),
+                        max(catalog.num_nodes, 1),
+                    )
+                    alt = "request" if choice == 1 else "bitset"
+            cap = 0
+            if alt == "request":
+                cap = qstats.request_capacity(
+                    tinfo.num_rows, sel, catalog.num_nodes
+                )
+            decisions[id(node)] = _SemiJoinPlan(
+                alt=alt, capacity=cap,
+                key=f"{query_name or 'query'}_sj{len(decisions)}",
+            )
+            sel *= gamma
+    return decisions
+
+
+def _kernel_filter(root: GroupAgg) -> tuple:
+    """The fused Pallas kernel consumes its filter directly: the chain must
+    be Scan -> Filter(Col <= Lit int) -> GroupAgg.  Returns (col, cutoff)."""
+    ops_below = _chain(root)[:-1]  # strip GroupAgg
+    if len(ops_below) == 2 and isinstance(ops_below[1], Filter):
+        p = ops_below[1].pred
+        if (isinstance(p, BinOp) and p.op == "<="
+                and isinstance(p.lhs, Col) and isinstance(p.rhs, Lit)
+                and isinstance(p.rhs.value, int)):
+            return p.lhs.name, int(p.rhs.value)
+    raise LoweringError(
+        "method='kernel' lowers to the fused filter+aggregate Pallas kernel "
+        "and requires exactly Scan -> Filter(col <= int) -> GroupAgg"
+    )
+
+
+# ---------------------------------------------------------------------------
+# trace-time stream evaluation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Stream:
+    base: str          # table whose partitioning the stream follows
+    cols: dict         # visible columns (local partition views)
+    mask: object       # bool array or None
+    overflow: object   # python False until an exchange contributes a flag
+
+    def and_mask(self, bits):
+        self.mask = bits if self.mask is None else (self.mask & bits)
+
+
+def _local_index(ctx, table, keys):
+    return keys - ctx.part(table).my_base(ctx.axis)
+
+
+def _measure_stack(aggs, cols, mask):
+    n = next(iter(cols.values())).shape[0]
+    outs = []
+    for a in aggs:
+        if a.agg == "count":
+            v = jnp.ones(n, jnp.float32)
+        else:
+            v = eval_expr(a.expr, cols).astype(jnp.float32)
+        outs.append(v)
+    stacked = jnp.stack(outs, axis=1)
+    if mask is not None:
+        stacked = jnp.where(mask[:, None], stacked, 0.0)
+    return stacked
+
+
+def lower(query: Query, catalog: Catalog):
+    """Compile ``query`` into ``plan(ctx, tables)`` (see module docstring
+    for the output contract).  Raises :class:`IRValidationError` for
+    malformed IR and :class:`LoweringError` for valid-but-uncompilable
+    queries (min/max aggregates, kernel-ineligible shapes)."""
+    root = query.root
+    validate(root, catalog)
+    if not isinstance(root, (GroupAgg, TopK)):
+        raise LoweringError(
+            f"query root must be group_agg or top_k to produce a result set "
+            f"(got {type(root).__name__}) — add an aggregation or selection"
+        )
+    if isinstance(root, GroupAgg):
+        bad = [a.name for a in root.aggs if a.agg in ("min", "max")]
+        if bad:
+            raise LoweringError(
+                f"min/max aggregates {bad} are served by Tier-1 rollup cubes "
+                f"only; the SPMD lowering supports sum/count — route this "
+                f"query through a covering cube or drop the measure"
+            )
+        num_groups = math.prod(k.cardinality for k in root.keys) if root.keys else 1
+        if root.method == "kernel":
+            if num_groups > KERNEL_MAX_GROUPS:
+                raise LoweringError(
+                    f"{num_groups} groups exceeds the grouped_agg kernel "
+                    f"limit {KERNEL_MAX_GROUPS}"
+                )
+            kernel_col, kernel_cutoff = _kernel_filter(root)
+
+    sj_plans = _decide_semijoins(root, catalog, query_name=query.name)
+
+    def _eval(node, ctx, t) -> _Stream:
+        if isinstance(node, Scan):
+            return _Stream(base=node.table, cols=dict(t[node.table]),
+                           mask=None, overflow=False)
+
+        s = _eval(node.child, ctx, t)
+
+        if isinstance(node, Filter):
+            s.and_mask(eval_expr(node.pred, s.cols))
+            return s
+
+        if isinstance(node, Project):
+            for name, e in node.cols:
+                s.cols[name] = eval_expr(e, s.cols)
+            return s
+
+        if isinstance(node, SemiJoin):
+            plan = sj_plans[id(node)]
+            target_cols = t[node.table]
+            part = ctx.part(node.table)
+            key = eval_expr(node.key, s.cols)
+            if plan.alt == "local":
+                bits_owner = eval_expr(node.pred, target_cols)
+                s.and_mask(bits_owner[_local_index(ctx, node.table, key)])
+            elif plan.alt == "bitset":
+                local_bits = eval_expr(node.pred, target_cols)
+                words = semijoin.alt2_bitset(local_bits, axis=ctx.axis)
+                s.and_mask(semijoin.probe(words, key, part))
+            else:  # request (Alt-1 index-lookup exchange)
+                needed = expr_columns(node.pred)
+
+                def pred_fn(local_idx, m, _cols=target_cols, _p=node.pred,
+                            _need=needed):
+                    view = {c: _cols[c][local_idx] for c in _need}
+                    return eval_expr(_p, view) & m
+
+                mask = (s.mask if s.mask is not None
+                        else jnp.ones(key.shape[0], bool))
+                bits, ovf = semijoin.alt1_request(
+                    key, mask, part, pred_fn,
+                    # the derived capacity, unless the execution context
+                    # carries an explicit override under this plan's key
+                    capacity=ctx.cap(plan.key, plan.capacity),
+                    axis=ctx.axis, backend=ctx.backend,
+                )
+                s.and_mask(bits)
+                s.overflow = s.overflow | ovf
+            return s
+
+        if isinstance(node, Exists):
+            inner = t[node.table]
+            bits = eval_expr(node.pred, inner)
+            rows = ctx.part(s.base).rows_per_node
+            fk_local = _local_index(ctx, s.base, inner[node.key])
+            has = jnp.zeros(rows, bool).at[fk_local].max(bits)
+            s.and_mask(has)
+            return s
+
+        if isinstance(node, GroupAggByKey):
+            key = eval_expr(node.key, s.cols)
+            parent_part = ctx.part(node.into)
+            rows = parent_part.rows_per_node
+            idx = _local_index(ctx, node.into, key)
+            derived = {}
+            for a in node.aggs:
+                if a.agg == "count":
+                    v = jnp.ones(key.shape[0], jnp.float32)
+                else:
+                    v = eval_expr(a.expr, s.cols).astype(jnp.float32)
+                if s.mask is not None:
+                    v = jnp.where(s.mask, v, 0.0)
+                derived[a.name] = jnp.zeros(rows, jnp.float32).at[idx].add(v)
+            return _Stream(
+                base=node.into,
+                cols={**dict(t[node.into]), **derived},
+                mask=None,
+                overflow=s.overflow,
+            )
+
+        raise LoweringError(f"cannot lower operator {type(node).__name__}")
+
+    def plan(ctx, t):
+        if isinstance(root, GroupAgg):
+            if root.method == "kernel":
+                from repro.kernels import ops
+
+                s = _eval(root.child, ctx, t)
+                gid = _group_ids(root, s, clip=True)  # kernel indexes by gid
+                stacked = _measure_stack(root.aggs, s.cols, mask=None)
+                local = ops.filtered_group_sum(
+                    stacked, gid, s.cols[kernel_col],
+                    cutoff=kernel_cutoff, num_groups=num_groups,
+                )
+            else:
+                s = _eval(root.child, ctx, t)
+                method = root.method
+                if method == "auto":
+                    method = "onehot" if num_groups <= ONEHOT_MAX_GROUPS else "dense"
+                if num_groups == 1:
+                    # global aggregate: per-measure masked tree-sums (the
+                    # hand-plan shape), no one-hot detour
+                    n = next(iter(s.cols.values())).shape[0]
+                    outs = []
+                    for a in root.aggs:
+                        v = (jnp.ones(n, jnp.float32) if a.agg == "count"
+                             else eval_expr(a.expr, s.cols).astype(jnp.float32))
+                        if s.mask is not None:
+                            v = jnp.where(s.mask, v, 0.0)
+                        outs.append(jnp.sum(v))
+                    local = jnp.stack(outs)[None, :]
+                elif method == "onehot":
+                    # out-of-range codes match no one-hot row and drop out,
+                    # so no clamp pass is needed (keeps the HLO identical
+                    # to the hand-written plans)
+                    gid = _group_ids(root, s, clip=False)
+                    stacked = _measure_stack(root.aggs, s.cols, s.mask)
+                    local = aggregation.group_sum_onehot(stacked, gid, num_groups)
+                else:
+                    gid = _group_ids(root, s, clip=True)  # scatter safety
+                    stacked = _measure_stack(root.aggs, s.cols, s.mask)
+                    local = jnp.stack(
+                        [aggregation.group_sum_dense(stacked[:, c], gid, num_groups)
+                         for c in range(stacked.shape[1])],
+                        axis=1,
+                    )
+            out = {"value": lax.psum(local, ctx.axis)}
+            if s.overflow is not False:
+                out["overflow"] = s.overflow
+            return out
+
+        # TopK root
+        s = _eval(root.child, ctx, t)
+        if root.pred is not None:
+            s.and_mask(eval_expr(root.pred, s.cols))
+        values = eval_expr(root.value, s.cols)
+        keys = ctx.part(s.base).global_keys(ctx.axis)
+        local = topk.local_topk(values, keys, root.k, s.mask)
+        winners = topk.topk_allreduce(local, ctx.axis)
+        out = {"values": winners.values, "keys": winners.keys,
+               "valid": winners.valid}
+        own = [f for f in root.fetch if f.table is None]
+        if own:
+            attrs = late_materialization.materialize(
+                winners.keys, winners.valid, ctx.part(s.base),
+                {f.name: s.cols[f.name] for f in own}, axis=ctx.axis,
+            )
+            out.update(attrs)
+        for f in root.fetch:
+            if f.table is None:
+                continue
+            attrs = late_materialization.materialize(
+                out[f.key], winners.valid, ctx.part(f.table),
+                {f.name: t[f.table][f.name]}, axis=ctx.axis,
+            )
+            out.update(attrs)
+        if s.overflow is not False:
+            out["overflow"] = s.overflow
+        return out
+
+    def _group_ids(node: GroupAgg, s: _Stream, *, clip: bool):
+        n = next(iter(s.cols.values())).shape[0]
+        if not node.keys:
+            return jnp.zeros(n, jnp.int32)
+        gid = None
+        for k in node.keys:
+            code = eval_expr(k.expr, s.cols).astype(jnp.int32)
+            if clip:
+                code = jnp.clip(code, 0, k.cardinality - 1)
+            gid = code if gid is None else gid * k.cardinality + code
+        return gid
+
+    return plan

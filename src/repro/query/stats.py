@@ -1,0 +1,109 @@
+"""The §3.2.2 selectivity model: predicate selectivities, semi-join
+alternative choice, and exchange buffer capacities derived from them.
+
+The paper sizes its communication buffers from the expected number of
+surviving keys after local filtering (n requests over a remote table of m
+rows; §3.2.2 gives the bits-communicated model, ``repro.core.compression``
+implements it).  Plans here are static-shape SPMD programs, so the same
+estimate must become a COMPILE-TIME buffer capacity: we take the expected
+per-destination message count under uniform key routing (a binomial with
+mean ``e = n_local / P``), add a 6-sigma tail margin plus a constant floor,
+and round up to a power of two.  Overflow flags in the exchange layer
+surface any under-estimate at run time instead of corrupting results.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+from repro.query.ir import (
+    Bin,
+    BinOp,
+    Col,
+    ColumnStats,
+    Expr,
+    Lit,
+    UnaryOp,
+    normalize_comparison,
+)
+
+# Selinger-style default for predicates the model cannot see through
+# (column-vs-column comparisons, opaque expressions).
+DEFAULT_SELECTIVITY = 1.0 / 3.0
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def capacity_for(expected: float, *, floor: int = 64) -> int:
+    """Static per-destination buffer capacity for an expected message count:
+    mean + 6*sqrt(mean) binomial tail margin + constant slack, rounded up to
+    a power of two (fixed shapes; see DESIGN.md on static shapes)."""
+    e = max(float(expected), 0.0)
+    need = e + 6.0 * math.sqrt(e) + 16.0
+    return next_pow2(max(floor, math.ceil(need)))
+
+
+def _range_fraction(st: ColumnStats, op: str, v: float) -> float:
+    """Fraction of a uniform [lo, hi] domain satisfying ``col op v``."""
+    lo, hi = st.lo, st.hi
+    if hi <= lo:
+        return 1.0
+    integral = st.n_distinct > 0
+    span = (hi - lo + 1.0) if integral else (hi - lo)
+    if op == "<":
+        frac = (v - lo) / span
+    elif op == "<=":
+        frac = (v - lo + (1.0 if integral else 0.0)) / span
+    elif op == ">":
+        frac = (hi - v) / span
+    elif op == ">=":
+        frac = (hi - v + (1.0 if integral else 0.0)) / span
+    else:
+        return DEFAULT_SELECTIVITY
+    return min(1.0, max(0.0, frac))
+
+
+def estimate_selectivity(pred: Expr, stats: Mapping[str, ColumnStats]) -> float:
+    """Estimated fraction of rows satisfying ``pred`` under independence +
+    uniformity (the paper's model; good enough to size buffers, and the
+    run-time overflow flag catches the rest)."""
+    if isinstance(pred, BinOp):
+        if pred.op == "and":
+            return (estimate_selectivity(pred.lhs, stats)
+                    * estimate_selectivity(pred.rhs, stats))
+        if pred.op == "or":
+            a = estimate_selectivity(pred.lhs, stats)
+            b = estimate_selectivity(pred.rhs, stats)
+            return min(1.0, a + b - a * b)
+        norm = normalize_comparison(pred)
+        if norm is not None:
+            col, op, v = norm
+            st = stats.get(col)
+            if st is None:
+                return DEFAULT_SELECTIVITY
+            if op == "==":
+                return 1.0 / st.n_distinct if st.n_distinct else DEFAULT_SELECTIVITY
+            if op == "!=":
+                return 1.0 - (1.0 / st.n_distinct) if st.n_distinct else DEFAULT_SELECTIVITY
+            try:
+                return _range_fraction(st, op, float(v))
+            except (TypeError, ValueError):
+                return DEFAULT_SELECTIVITY
+        return DEFAULT_SELECTIVITY
+    if isinstance(pred, UnaryOp) and pred.op == "not":
+        return 1.0 - estimate_selectivity(pred.operand, stats)
+    if isinstance(pred, Col):
+        # bare boolean column: no histogram, assume an even split
+        return 0.5
+    if isinstance(pred, (Lit, Bin)):
+        return DEFAULT_SELECTIVITY
+    return DEFAULT_SELECTIVITY
+
+
+def request_capacity(table_rows: int, selectivity: float, num_nodes: int) -> int:
+    """Capacity for an Alt-1 request / owner-routed exchange: each node
+    ships ``rows/P * sel`` keys, spread uniformly over P destinations."""
+    n_local = (table_rows / max(num_nodes, 1)) * min(max(selectivity, 0.0), 1.0)
+    return capacity_for(n_local / max(num_nodes, 1))

@@ -1,4 +1,4 @@
-"""TPC-H cube presets: the serving-workload rollups and their queries.
+"""TPC-H cube presets: the serving-workload rollups.
 
 The lineitem cube is the Q1 workhorse: (returnflag × linestatus ×
 ship-month) with all six Q1 measures, so the pricing summary report is a
@@ -7,35 +7,31 @@ ship-month dimension's bin edges are calendar month ends PLUS the Q1
 cutoff date, making the ``l_shipdate <= cutoff`` predicate exactly
 answerable (bins are ``(prev_edge, edge]``).
 
-The orders cube covers priority/status/order-month counting queries.
-Queries outside cube coverage (Q4's EXISTS against lineitem, arbitrary-date
-filters) route to the Tier-2 precompiled plans.
+Measures are declared with the SAME IR expressions as the registry queries
+(``repro.tpch.queries.REVENUE``/``CHARGE``), which is what lets the cube
+router match a ``GroupAgg`` root against a spec structurally — one
+definition of "revenue" across tiers.
+
+The serving queries themselves live in ``repro.tpch.queries`` (they are
+plain IR queries now); ``SERVING_QUERIES`` is re-exported here for the
+launcher and benchmarks.
 """
 from __future__ import annotations
 
-from repro.cube import AggQuery, CubeSpec, Dimension, Filter, Measure
+from repro.cube import CubeSpec, Dimension, Measure
+from repro.query import C
 from repro.tpch import schema as S
+from repro.tpch.queries import (  # noqa: F401  (re-exports)
+    CHARGE,
+    REVENUE,
+    SERVING_QUERIES,
+    month_edges,
+    orders_by_priority_query,
+    q1_query,
+    revenue_by_shipmonth_query,
+    uncovered_query,
+)
 from repro.tpch.schema import DEFAULT_PARAMS as DP
-
-
-def month_edges(extra=()):
-    """Last day (in TPC-H day numbers) of every month 1992-01..1998-12,
-    plus any extra cut points (deduplicated, sorted)."""
-    edges = set()
-    for y in range(1992, 1999):
-        for m in range(1, 13):
-            nxt = (y + 1, 1) if m == 12 else (y, m + 1)
-            edges.add(S.day(nxt[0], nxt[1], 1) - 1)
-    edges.update(extra)
-    return tuple(sorted(edges))
-
-
-def _revenue(cols):
-    return cols["l_extendedprice"] * (1.0 - cols["l_discount"])
-
-
-def _charge(cols):
-    return _revenue(cols) * (1.0 + cols["l_tax"])
 
 
 def lineitem_cube(params=DP) -> CubeSpec:
@@ -49,11 +45,11 @@ def lineitem_cube(params=DP) -> CubeSpec:
                       edges=month_edges(extra=(params.q1_shipdate_max,))),
         ),
         measures=(
-            Measure("sum_qty", "sum", "l_quantity"),
-            Measure("sum_base_price", "sum", "l_extendedprice"),
-            Measure("sum_disc_price", "sum", _revenue),
-            Measure("sum_charge", "sum", _charge),
-            Measure("sum_disc", "sum", "l_discount"),
+            Measure("sum_qty", "sum", C("l_quantity")),
+            Measure("sum_base_price", "sum", C("l_extendedprice")),
+            Measure("sum_disc_price", "sum", REVENUE),
+            Measure("sum_charge", "sum", CHARGE),
+            Measure("sum_disc", "sum", C("l_discount")),
             Measure("count_order", "count"),
         ),
         rollups=(
@@ -79,9 +75,9 @@ def orders_cube(params=DP) -> CubeSpec:
         ),
         measures=(
             Measure("count_orders", "count"),
-            Measure("sum_totalprice", "sum", "o_totalprice"),
-            Measure("min_totalprice", "min", "o_totalprice"),
-            Measure("max_totalprice", "max", "o_totalprice"),
+            Measure("sum_totalprice", "sum", C("o_totalprice")),
+            Measure("min_totalprice", "min", C("o_totalprice")),
+            Measure("max_totalprice", "max", C("o_totalprice")),
         ),
         rollups=(
             ("orderpriority", "orderstatus", "ordermonth"),
@@ -92,61 +88,3 @@ def orders_cube(params=DP) -> CubeSpec:
 
 def default_specs(params=DP) -> tuple:
     return (lineitem_cube(params), orders_cube(params))
-
-
-# -- canonical serving queries ----------------------------------------------
-
-
-def q1_query(params=DP) -> AggQuery:
-    """TPC-H Q1 as a cube query: reshaping the (3, 2, 6) answer to (6, 6)
-    reproduces ``tpch.reference.q1`` exactly (group id = returnflag*2 +
-    linestatus is the C-order of the (returnflag, linestatus) axes)."""
-    return AggQuery(
-        table="lineitem",
-        group_by=("returnflag", "linestatus"),
-        measures=("sum_qty", "sum_base_price", "sum_disc_price", "sum_charge",
-                  "sum_disc", "count_order"),
-        filters=(Filter("shipmonth", "<=", params.q1_shipdate_max),),
-        fallback="q1",
-    )
-
-
-def revenue_by_shipmonth_query() -> AggQuery:
-    return AggQuery(
-        table="lineitem",
-        group_by=("shipmonth",),
-        measures=("sum_disc_price", "count_order"),
-    )
-
-
-def orders_by_priority_query(params=DP) -> AggQuery:
-    """Q4-shaped distribution (date-windowed priority counts) — answerable
-    from the orders cube because the window bounds sit on bin edges; the
-    EXISTS-filtered real Q4 still needs Tier 2."""
-    return AggQuery(
-        table="orders",
-        group_by=("orderpriority",),
-        measures=("count_orders", "sum_totalprice"),
-        filters=(Filter("ordermonth", ">=", params.q4_date_min),
-                 Filter("ordermonth", "<", params.q4_date_max)),
-        fallback="q4",
-    )
-
-
-def uncovered_query(params=DP) -> AggQuery:
-    """A Q1 variant whose shipdate bound is NOT a bin edge — must fall back
-    to the Tier-2 compiled plan."""
-    return AggQuery(
-        table="lineitem",
-        group_by=("returnflag", "linestatus"),
-        measures=("sum_qty", "count_order"),
-        filters=(Filter("shipmonth", "<=", params.q1_shipdate_max - 1),),
-        fallback="q1",
-    )
-
-
-SERVING_QUERIES = {
-    "q1_cube": q1_query,
-    "revenue_by_shipmonth": revenue_by_shipmonth_query,
-    "orders_by_priority": orders_by_priority_query,
-}

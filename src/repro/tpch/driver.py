@@ -1,35 +1,41 @@
-"""End-to-end TPC-H driver: generate -> place -> run plan -> check vs oracle.
+"""End-to-end TPC-H driver: generate -> place -> route/compile -> check.
 
 Used by tests, benchmarks and the serving example; this is the paper's
-"prototype running a subset of TPC-H" in one object.
+"prototype running a subset of TPC-H" in one object, redesigned around the
+declarative Query IR: ``query()`` takes ONE type (an IR ``Query``, or a
+registered name as sugar for its definition) and routes it
+
+  Tier 1  to the finest covering rollup cube (the router matches the
+          ``GroupAgg`` root structurally — no hand-named fallback), else
+  Tier 2  to the SPMD executable LOWERED from the IR itself, so one
+          logical query has one result schema on every path (the
+          hand-written plans stay reachable via ``run(name)``).
+
+Exchange buffer capacities come from the §3.2.2 selectivity model
+(``repro.tpch.capacities`` for the hand plans, ``repro.query.stats``
+inside the lowering) instead of per-query magic constants; explicit
+overrides still win.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import numpy as np
 
 from repro.core import Cluster, Table
-from repro.core.plans import PLANS
-from repro.cube import AggQuery, CubeRouter, build_cube
+from repro.core import plans as plan_registry
+from repro.cube import CubeRouter, build_cube
+from repro.query import (
+    LoweringError,
+    Query,
+    UncoveredQueryError,
+    build_catalog,
+    lower,
+    same_query,
+)
+from repro.tpch import capacities as tpch_capacities
 from repro.tpch import dbgen, reference
-from repro.tpch.schema import DEFAULT_PARAMS
-
-# default fixed-capacity knobs for small/medium scale factors; a production
-# deployment derives them from the §3.2.2 selectivity model (see
-# benchmarks/semijoin_cost.py)
-DEFAULT_CAPACITIES = {
-    "q2_request": 1024,
-    "q2_owner": 1024,
-    "q3_chunk": 256,
-    "q3_rounds": 64,
-    "q5_request": 8192,
-    "q13_route": 8192,
-    "q14_request": 8192,
-    "q15_group": 1024,
-    "q15_candidates": 256,
-    "q21_request": 2048,
-}
 
 
 @dataclasses.dataclass
@@ -37,8 +43,9 @@ class QueryAnswer:
     """Result of router-first execution: which tier served the query."""
 
     value: object
-    tier: int          # 1 = rollup cube, 2 = precompiled plan
-    source: str        # cube name (tier 1) or plan name (tier 2)
+    tier: int            # 1 = rollup cube, 2 = compiled SPMD plan
+    source: str          # cube name (tier 1) or plan/query name (tier 2)
+    overflow: bool = False  # a Tier-2 exchange buffer overflowed
 
 
 class TPCHDriver:
@@ -48,16 +55,20 @@ class TPCHDriver:
         self.sf = sf
         self.seed = seed
         self.backend = backend
-        self.capacities = dict(DEFAULT_CAPACITIES)
+        # §3.2.2-derived capacities for the hand plans; explicit overrides win
+        self.capacities = tpch_capacities.derive(sf, self.cluster.num_nodes)
         self.capacities.update(capacities or {})
         self.tables = dbgen.generate(sf, self.cluster.num_nodes, seed)
         # pad the supplier key space so §3.2.5 groups divide evenly
         self._extend_derived_tables()
+        self.catalog = build_catalog(self.tables,
+                                     num_nodes=self.cluster.num_nodes)
         self.placed = {n: self.cluster.load(t) for n, t in self.tables.items()}
         self.ctx = self.cluster.context(
             self.placed, self.capacities, backend=backend, scale_factor=sf
         )
-        self._compiled = {}
+        self._compiled = {}       # registry name -> compiled hand plan
+        self._compiled_ir = {}    # query name/id -> (query, compiled fn)
         self.cubes = {}
         self.router: CubeRouter | None = None
 
@@ -71,16 +82,61 @@ class TPCHDriver:
             replicated=True,
         )
 
+    def _columns(self):
+        return {n: t.columns for n, t in self.placed.items()}
+
+    # -- physical layer (hand plans / lowered IR by registry name) ---------
     def compile(self, name: str):
+        """Compiled plan for a registered query: the hand-written physical
+        plan when one exists, else the lowered IR (shared with the
+        structural query cache — one executable per query)."""
         if name not in self._compiled:
-            plan = PLANS[name]
-            self._compiled[name] = self.cluster.compile(plan, self.ctx, self.placed)
+            entry = plan_registry.get(name)
+            if entry.plan is not None:
+                self._compiled[name] = self.cluster.compile(
+                    entry.plan, self.ctx, self.placed)
+            elif entry.ir is not None:
+                self._compiled[name] = self.compile_query(entry.ir)
+            else:  # pragma: no cover — registry invariant
+                raise LoweringError(f"{name!r} has neither plan nor IR")
         return self._compiled[name]
 
     def run(self, name: str):
-        fn = self.compile(name)
-        columns = {n: t.columns for n, t in self.placed.items()}
-        return fn(columns)
+        return self.compile(name)(self._columns())
+
+    def compile_ir(self, name: str):
+        """Compiled LOWERED plan for a registered query's IR (even when a
+        hand plan exists — used to compare the two)."""
+        entry = plan_registry.get(name)
+        if entry.ir is None:
+            raise LoweringError(
+                f"{name!r} has no IR definition — only the hand-written "
+                f"plan; express it in the algebra first"
+            )
+        return self.compile_query(entry.ir)
+
+    def run_ir(self, name: str):
+        return self.compile_ir(name)(self._columns())
+
+    IR_CACHE_MAX = 32  # compiled-executable LRU bound for ad-hoc queries
+
+    def compile_query(self, q: Query):
+        """Lower + compile an arbitrary IR query.  Cached structurally (a
+        caller reconstructing the same query per request reuses the
+        executable; ``same_query`` guards against repr-hash collisions and
+        same-name variants), with an LRU bound so a stream of novel ad-hoc
+        queries cannot pin executables without limit."""
+        key = f"{q.name}@{hash(repr(q.root))}"
+        hit = self._compiled_ir.get(key)
+        if hit is not None and (hit[0] is q or same_query(hit[0], q)):
+            self._compiled_ir[key] = self._compiled_ir.pop(key)  # LRU touch
+            return hit[1]
+        plan = lower(q, self.catalog)
+        fn = self.cluster.compile(plan, self.ctx, self.placed)
+        self._compiled_ir[key] = (q, fn)
+        while len(self._compiled_ir) > self.IR_CACHE_MAX:
+            self._compiled_ir.pop(next(iter(self._compiled_ir)))
+        return fn
 
     # -- two-tier execution (repro.cube) -----------------------------------
     def build_cubes(self, specs=None):
@@ -98,27 +154,55 @@ class TPCHDriver:
         return self.cubes
 
     def query(self, q) -> QueryAnswer:
-        """Router-first execution: serve from the finest covering rollup
-        (Tier 1) when one exists, otherwise run the precompiled plan over
-        the base tables (Tier 2).  ``q`` is an ``AggQuery`` or a plan name."""
+        """Router-first execution of ONE query type.
+
+        ``q`` is an IR ``Query`` (a registered name is accepted as sugar
+        for its definition).  A ``GroupAgg`` root covered by a rollup is
+        answered from the cube (Tier 1, host microseconds); anything else
+        runs as the compiled SPMD plan lowered from the IR over the base
+        tables (Tier 2).  Raises :class:`UncoveredQueryError` when no cube
+        covers the query and the IR has no lowerable form (e.g. min/max
+        measures off-edge)."""
         if isinstance(q, str):
-            return QueryAnswer(self.run(q), tier=2, source=q)
-        if not isinstance(q, AggQuery):
-            raise TypeError(f"query() takes an AggQuery or plan name, got {type(q)}")
-        if self.router is not None:
-            route = self.router.route(q)
-            if route is not None:
-                value = self.router.answer(q, route)
-                return QueryAnswer(value, tier=1, source=route.cube.spec.name)
-        if q.fallback is None:
-            raise LookupError(
-                f"no cube covers the query over {q.table} and it names no "
-                f"Tier-2 fallback plan"
+            entry = plan_registry.get(q)
+            if entry.ir is None:
+                return QueryAnswer(jax.device_get(self.run(q)), tier=2,
+                                   source=q)
+            q = entry.ir
+        if not isinstance(q, Query):
+            raise TypeError(
+                f"query() takes a repro.query.Query (or a registered plan "
+                f"name), got {type(q)}"
             )
-        return QueryAnswer(self.run(q.fallback), tier=2, source=q.fallback)
+        if self.router is not None:
+            match = self.router.route_query(q)
+            if match is not None:
+                value = self.router.answer(match.query, match.route)
+                value = np.asarray(value).reshape(-1, value.shape[-1])
+                return QueryAnswer(value, tier=1,
+                                   source=match.route.cube.spec.name)
+        # Tier 2 of an IR query is ALWAYS the lowered IR, so one logical
+        # query has one result schema regardless of parameters or coverage
+        # (hand plans remain reachable via run(name) — the escape hatch).
+        try:
+            fn = self.compile_query(q)
+        except LoweringError as e:
+            raise UncoveredQueryError(
+                f"no rollup cube covers query {q.name or '<anonymous>'} and "
+                f"it has no lowerable Tier-2 form: {e}"
+            ) from e
+        out = jax.device_get(fn(self._columns()))
+        overflow = bool(out.pop("overflow", False))
+        value = out["value"] if set(out) == {"value"} else out
+        return QueryAnswer(value, tier=2, source=q.name or "<lowered-ir>",
+                           overflow=overflow)
 
     def oracle(self, name: str, **kw):
-        base = name.split("_")[0]
-        if base == "q11":
+        """Float64 numpy reference via the registry's EXPLICIT oracle
+        binding (``q15_1factor`` -> ``q15`` etc. — no name munging)."""
+        entry = plan_registry.get(name)
+        if entry.oracle is None:
+            raise LoweringError(f"{name!r} has no oracle binding")
+        if entry.oracle == "q11":
             kw.setdefault("sf", self.sf)
-        return reference.ALL[base](self.tables, **kw)
+        return reference.ALL[entry.oracle](self.tables, **kw)

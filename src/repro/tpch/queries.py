@@ -1,0 +1,200 @@
+"""TPC-H queries expressed in the declarative IR (``repro.query``).
+
+One definition per query serves every consumer: the registry
+(``repro.core.plans.REGISTRY``) carries these next to the hand-written
+physical plans, the lowering pass compiles them to SPMD executables, and
+the cube router matches their ``GroupAgg`` roots against Tier-1 rollups.
+The shared measure expressions (``REVENUE``, ``CHARGE``) and the
+``month_edges`` bin grid are THE single source of truth — ``repro.tpch.
+cubes`` builds its specs from the same objects, which is what makes
+IR-vs-cube structural matching exact.
+"""
+from __future__ import annotations
+
+from repro.query import Bin, C, Fetch, Q, Query
+from repro.tpch import schema as S
+from repro.tpch.schema import DEFAULT_PARAMS as DP
+
+# shared measure expressions (the TPC-H pricing terms)
+REVENUE = C("l_extendedprice") * (1.0 - C("l_discount"))
+CHARGE = REVENUE * (1.0 + C("l_tax"))
+
+
+def month_edges(extra=()) -> tuple:
+    """Last day (in TPC-H day numbers) of every month 1992-01..1998-12,
+    plus any extra cut points (deduplicated, sorted)."""
+    edges = set()
+    for y in range(1992, 1999):
+        for m in range(1, 13):
+            nxt = (y + 1, 1) if m == 12 else (y, m + 1)
+            edges.add(S.day(nxt[0], nxt[1], 1) - 1)
+    edges.update(extra)
+    return tuple(sorted(edges))
+
+
+# ---------------------------------------------------------------------------
+# registry queries (the paper's §4.3 set that the algebra covers)
+# ---------------------------------------------------------------------------
+
+
+def q1_ir(p=DP, method: str = "auto") -> Query:
+    """Pricing summary report: filter + 6-group aggregate.  The flattened
+    (6, 6) result matches ``reference.q1`` (group id = returnflag*2 +
+    linestatus is the row-major order of the two keys)."""
+    return (
+        Q.scan("lineitem")
+        .filter(C("l_shipdate") <= p.q1_shipdate_max)
+        .group_agg(
+            keys=[("returnflag", C("l_returnflag"), len(S.RETURNFLAGS)),
+                  ("linestatus", C("l_linestatus"), len(S.LINESTATUS))],
+            aggs=[("sum_qty", "sum", C("l_quantity")),
+                  ("sum_base_price", "sum", C("l_extendedprice")),
+                  ("sum_disc_price", "sum", REVENUE),
+                  ("sum_charge", "sum", CHARGE),
+                  ("sum_disc", "sum", C("l_discount")),
+                  ("count_order", "count")],
+            method=method,
+        )
+        .named("q1" if method == "auto" else f"q1_{method}")
+    )
+
+
+def q4_ir(p=DP) -> Query:
+    """Order priority checking: date window + EXISTS late-lineitem probe
+    (co-partitioned scatter) + 5-group count."""
+    return (
+        Q.scan("orders")
+        .filter((C("o_orderdate") >= p.q4_date_min)
+                & (C("o_orderdate") < p.q4_date_max))
+        .exists("lineitem", key="l_orderkey",
+                pred=C("l_commitdate") < C("l_receiptdate"))
+        .group_agg(
+            keys=[("orderpriority", C("o_orderpriority"), len(S.PRIORITIES))],
+            aggs=[("order_count", "count")],
+        )
+        .named("q4")
+    )
+
+
+def q6_ir(p=DP) -> Query:
+    """Forecasting revenue change: pure filter + global sum (1-cell
+    GroupAgg)."""
+    return (
+        Q.scan("lineitem")
+        .filter((C("l_shipdate") >= p.q6_date_min)
+                & (C("l_shipdate") < p.q6_date_max)
+                & (C("l_discount") >= p.q6_disc_min)
+                & (C("l_discount") <= p.q6_disc_max)
+                & (C("l_quantity") < p.q6_quantity))
+        .group_agg(
+            aggs=[("revenue", "sum", C("l_extendedprice") * C("l_discount"))],
+        )
+        .named("q6")
+    )
+
+
+def q18_ir(p=DP, k: int = 100) -> Query:
+    """Large volume customers: co-partitioned group-by onto orders, filter
+    on the aggregate, global top-k, then §3.2.7 late materialization of the
+    output-only attributes (customer name via the remote fetch)."""
+    return (
+        Q.scan("lineitem")
+        .group_by_key(C("l_orderkey"), into="orders",
+                      aggs=[("sum_qty", "sum", C("l_quantity"))])
+        .filter(C("sum_qty") > p.q18_quantity)
+        .top_k(
+            value=C("o_totalprice"), k=k,
+            fetch=(Fetch("o_custkey"), Fetch("o_orderdate"), Fetch("sum_qty"),
+                   Fetch("c_name_code", table="customer", key="o_custkey")),
+        )
+        .named("q18")
+    )
+
+
+def q14_promo_ir(p=DP, alt: str = "auto") -> Query:
+    """Promotion-effect numerator (the Q14 semi-join shape): month window
+    on lineitem, remote part-type filter via the §3.2.2 semi-join — the
+    lowering picks Alt-1/Alt-2 from the cost model and derives the request
+    capacity from the selectivity model."""
+    return (
+        Q.scan("lineitem")
+        .filter((C("l_shipdate") >= p.q14_date_min)
+                & (C("l_shipdate") < p.q14_date_max))
+        .semijoin("part", key=C("l_partkey"),
+                  pred=C("p_type") < S.PROMO_TYPES, alt=alt)
+        .group_agg(aggs=[("promo_revenue", "sum", REVENUE)])
+        .named("q14_promo" if alt == "auto" else f"q14_promo_{alt}")
+    )
+
+
+IR_QUERIES = {
+    "q1": q1_ir(),
+    "q1_kernel": q1_ir(method="kernel"),
+    "q4": q4_ir(),
+    "q6": q6_ir(),
+    "q14_promo": q14_promo_ir(),
+    "q18": q18_ir(),
+}
+
+
+# ---------------------------------------------------------------------------
+# serving queries (the cube workload; all are GroupAgg roots so the router
+# can match them, and all lower to SPMD plans when no rollup covers them)
+# ---------------------------------------------------------------------------
+
+
+def q1_query(p=DP) -> Query:
+    return q1_ir(p)
+
+
+def revenue_by_shipmonth_query(p=DP) -> Query:
+    return (
+        Q.scan("lineitem")
+        .group_agg(
+            keys=[("shipmonth",
+                   Bin(C("l_shipdate"), month_edges(extra=(p.q1_shipdate_max,))))],
+            aggs=[("sum_disc_price", "sum", REVENUE),
+                  ("count_order", "count")],
+        )
+        .named("revenue_by_shipmonth")
+    )
+
+
+def orders_by_priority_query(p=DP) -> Query:
+    """Date-windowed priority counts.  Cube-covered because the window
+    bounds sit on bin edges; off-edge windows lower to a fresh SPMD plan
+    (no hand-written fallback needed — this used to mis-route to Q4)."""
+    return (
+        Q.scan("orders")
+        .filter((C("o_orderdate") >= p.q4_date_min)
+                & (C("o_orderdate") < p.q4_date_max))
+        .group_agg(
+            keys=[("orderpriority", C("o_orderpriority"), len(S.PRIORITIES))],
+            aggs=[("count_orders", "count"),
+                  ("sum_totalprice", "sum", C("o_totalprice"))],
+        )
+        .named("orders_by_priority")
+    )
+
+
+def uncovered_query(p=DP) -> Query:
+    """A Q1 variant whose shipdate bound is NOT a bin edge — the router
+    rejects it and the driver answers Tier 2 from the lowered IR."""
+    return (
+        Q.scan("lineitem")
+        .filter(C("l_shipdate") <= p.q1_shipdate_max - 1)
+        .group_agg(
+            keys=[("returnflag", C("l_returnflag"), len(S.RETURNFLAGS)),
+                  ("linestatus", C("l_linestatus"), len(S.LINESTATUS))],
+            aggs=[("sum_qty", "sum", C("l_quantity")),
+                  ("count_order", "count")],
+        )
+        .named("q1_offedge")
+    )
+
+
+SERVING_QUERIES = {
+    "q1_cube": q1_query,
+    "revenue_by_shipmonth": revenue_by_shipmonth_query,
+    "orders_by_priority": orders_by_priority_query,
+}

@@ -1,4 +1,4 @@
-"""Pure-numpy oracle for the 11 implemented TPC-H queries (paper §4.3).
+"""Pure-numpy oracle for the 12 implemented TPC-H queries (paper §4.3).
 
 Operates on the GLOBAL (unpartitioned) tables in float64 — the correctness
 baseline every distributed plan must match ("we check the query results for
@@ -120,6 +120,19 @@ def q5(t, p=DP):
     return rev  # revenue per nation (only the region's nations are nonzero)
 
 
+def q6(t, p=DP):
+    li = t["lineitem"].columns
+    sel = (
+        (li["l_shipdate"] >= p.q6_date_min)
+        & (li["l_shipdate"] < p.q6_date_max)
+        & (li["l_discount"] >= p.q6_disc_min)
+        & (li["l_discount"] <= p.q6_disc_max)
+        & (li["l_quantity"] < p.q6_quantity)
+    )
+    rev = li["l_extendedprice"].astype(np.float64) * li["l_discount"].astype(np.float64)
+    return rev[sel].sum()
+
+
 def q11(t, p=DP, sf: float = 1.0, cap: int = 128):
     ps = t["partsupp"].columns
     sup = t["supplier"].columns
@@ -213,6 +226,6 @@ def q21(t, p=DP, k=100):
 
 
 ALL = {
-    "q1": q1, "q2": q2, "q3": q3, "q4": q4, "q5": q5, "q11": q11,
+    "q1": q1, "q2": q2, "q3": q3, "q4": q4, "q5": q5, "q6": q6, "q11": q11,
     "q13": q13, "q14": q14, "q15": q15, "q18": q18, "q21": q21,
 }

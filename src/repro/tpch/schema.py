@@ -66,6 +66,13 @@ class QueryParams:
     q5_region: int = 2                           # ASIA
     q5_date_min: int = day(1994, 1, 1)
     q5_date_max: int = day(1995, 1, 1)
+    q6_date_min: int = day(1994, 1, 1)
+    q6_date_max: int = day(1995, 1, 1)
+    # discount window: DISCOUNT +/- 0.01 widened off the representable f32
+    # grid (0.045/0.075) so f32 plan vs f64 oracle comparisons can't flip
+    q6_disc_min: float = 0.045
+    q6_disc_max: float = 0.075
+    q6_quantity: float = 24.0
     q11_nation: int = 7                          # 'GERMANY'
     q11_fraction: float = 0.0001                 # / SF at runtime
     q14_date_min: int = day(1995, 9, 1)

@@ -1,12 +1,14 @@
 """Two-tier rollup-cube subsystem: build correctness vs the numpy oracles,
-router coverage/fallback decisions, and marginalization semantics."""
+IR-based router coverage/fallback decisions, and marginalization
+semantics."""
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
-from repro.cube import AggQuery, CubeSpec, Dimension, Filter, Measure
+from repro.cube import CubeSpec, Dimension, Filter, Measure
 from repro.cube.build import ROWS, build_cube
+from repro.query import C, Q, UncoveredQueryError
 from repro.tpch import cubes as tpch_cubes
 from repro.tpch.schema import DEFAULT_PARAMS as DP
 
@@ -49,13 +51,12 @@ def test_windowed_orders_query_matches_numpy(cubed_driver):
 
 
 def test_min_max_measures(cubed_driver):
-    q = AggQuery(
-        table="orders",
-        group_by=("orderstatus",),
-        measures=("min_totalprice", "max_totalprice"),
-        filters=(Filter("ordermonth", ">=", DP.q4_date_min),
-                 Filter("ordermonth", "<", DP.q4_date_max)),
-    )
+    q = (Q.scan("orders")
+         .filter((C("o_orderdate") >= DP.q4_date_min)
+                 & (C("o_orderdate") < DP.q4_date_max))
+         .group_agg(keys=[("orderstatus", C("o_orderstatus"), 3)],
+                    aggs=[("min_totalprice", "min", C("o_totalprice")),
+                          ("max_totalprice", "max", C("o_totalprice"))]))
     ans = cubed_driver.query(q)
     assert ans.tier == 1
     o = cubed_driver.tables["orders"].columns
@@ -72,14 +73,32 @@ def test_min_max_measures(cubed_driver):
 
 
 def test_coarse_rollup_is_preferred(cubed_driver):
-    route = cubed_driver.router.route(tpch_cubes.revenue_by_shipmonth_query())
-    assert route.rollup == ("shipmonth",)  # 86 cells, not the 516-cell finest
+    match = cubed_driver.router.route_query(
+        tpch_cubes.revenue_by_shipmonth_query())
+    assert match.route.rollup == ("shipmonth",)  # 86 cells, not the finest
 
 
 def test_router_falls_back_for_non_edge_bound(cubed_driver):
+    """The off-edge bound routes to Tier 2 — and with the IR there is no
+    hand-named fallback: the driver lowers the query itself, so the Tier-2
+    answer is the ACTUAL off-edge query, not an approximation."""
     ans = cubed_driver.query(tpch_cubes.uncovered_query())
     assert ans.tier == 2
-    assert ans.source == "q1"
+    assert ans.source == "q1_offedge"
+    li = cubed_driver.tables["lineitem"].columns
+    sel = li["l_shipdate"] <= DP.q1_shipdate_max - 1
+    g = li["l_returnflag"][sel] * 2 + li["l_linestatus"][sel]
+    ref = np.zeros((6, 2))
+    np.add.at(ref[:, 0], g, li["l_quantity"][sel].astype(np.float64))
+    np.add.at(ref[:, 1], g, 1.0)
+    np.testing.assert_allclose(np.asarray(ans.value), ref, rtol=2e-4)
+
+
+def _q1_shaped(bound):
+    return (Q.scan("lineitem")
+            .filter(C("l_shipdate") <= bound)
+            .group_agg(keys=[("returnflag", C("l_returnflag"), 3)],
+                       aggs=[("sum_qty", "sum", C("l_quantity"))]))
 
 
 def test_router_falls_back_below_first_edge(cubed_driver):
@@ -88,24 +107,96 @@ def test_router_falls_back_below_first_edge(cubed_driver):
     from repro.tpch.schema import day
 
     for bound in (day(1992, 1, 15), day(1999, 6, 1)):
-        q = AggQuery(table="lineitem", group_by=("returnflag",),
-                     measures=("sum_qty",),
-                     filters=(Filter("shipmonth", "<=", bound),), fallback="q1")
-        assert cubed_driver.router.route(q) is None, bound
+        assert cubed_driver.router.route_query(_q1_shaped(bound)) is None, bound
 
 
 def test_router_falls_back_for_uncovered_dims(cubed_driver):
-    q = AggQuery(table="lineitem", group_by=("returnflag",),
-                 measures=("sum_qty",),
-                 filters=(Filter("suppkey", "==", 3),), fallback="q1")
-    assert cubed_driver.router.route(q) is None
-    assert cubed_driver.query(q).tier == 2
+    """A filter on a column no cube carries as a dimension routes to Tier 2
+    and is answered by LOWERING the query — no registered plan involved."""
+    q = (Q.scan("lineitem")
+         .filter(C("l_suppkey") == 3)
+         .group_agg(keys=[("returnflag", C("l_returnflag"), 3)],
+                    aggs=[("sum_qty", "sum", C("l_quantity"))]))
+    assert cubed_driver.router.route_query(q) is None
+    ans = cubed_driver.query(q)
+    assert ans.tier == 2
+    li = cubed_driver.tables["lineitem"].columns
+    sel = li["l_suppkey"] == 3
+    ref = np.zeros(3)
+    np.add.at(ref, li["l_returnflag"][sel], li["l_quantity"][sel].astype(np.float64))
+    np.testing.assert_allclose(np.asarray(ans.value)[:, 0], ref, rtol=2e-4)
 
 
-def test_query_without_fallback_raises(cubed_driver):
-    q = AggQuery(table="lineitem", group_by=("returnflag",),
-                 measures=("no_such_measure",))
-    with pytest.raises(LookupError):
+def test_same_name_different_params_is_lowered_not_aliased(cubed_driver):
+    """A query that shares a registered NAME but not the registered IR
+    (e.g. q1 with a shifted cutoff) must be answered by lowering ITSELF,
+    never by silently running the stock hand plan."""
+    import dataclasses
+
+    from repro.tpch.queries import q1_ir
+
+    shifted = dataclasses.replace(DP, q1_shipdate_max=DP.q1_shipdate_max - 10)
+    q = q1_ir(shifted)  # still named "q1"
+    ans = cubed_driver.query(q)
+    assert ans.tier == 2
+    li = cubed_driver.tables["lineitem"].columns
+    sel = li["l_shipdate"] <= shifted.q1_shipdate_max
+    g = li["l_returnflag"][sel] * 2 + li["l_linestatus"][sel]
+    ref = np.zeros(6)
+    np.add.at(ref, g, li["l_quantity"][sel].astype(np.float64))
+    np.testing.assert_allclose(np.asarray(ans.value)[:, 0], ref, rtol=2e-4)
+
+
+def test_stacked_shadowing_projections_derive_outer_binding(cubed_driver):
+    """project(x=l_quantity) then project(x=x*2): the router must resolve
+    the OUTER binding (x = l_quantity*2), which matches no cube measure —
+    Tier 2 must answer with the doubled sum, agreeing with the lowering."""
+    q = (Q.scan("lineitem")
+         .project(x=C("l_quantity"))
+         .project(x=C("x") * 2.0)
+         .group_agg(keys=[("returnflag", C("l_returnflag"), 3)],
+                    aggs=[("sum_x", "sum", C("x"))]))
+    assert cubed_driver.router.route_query(q) is None
+    ans = cubed_driver.query(q)
+    assert ans.tier == 2
+    li = cubed_driver.tables["lineitem"].columns
+    ref = np.zeros(3)
+    np.add.at(ref, li["l_returnflag"], 2.0 * li["l_quantity"].astype(np.float64))
+    np.testing.assert_allclose(np.asarray(ans.value)[:, 0], ref, rtol=2e-4)
+
+
+def test_compile_query_cache_is_structural(cubed_driver):
+    """Reconstructing the same query object per request must reuse the
+    compiled executable, not recompile."""
+    from repro.tpch.queries import q1_ir
+
+    fn1 = cubed_driver.compile_query(q1_ir())
+    fn2 = cubed_driver.compile_query(q1_ir())  # fresh object, same structure
+    assert fn1 is fn2
+
+
+def test_shadowing_projection_derivation_terminates(cubed_driver):
+    """route_query on a projection that shadows its input column must not
+    recurse forever; the rewritten measure doesn't match any cube, so the
+    query lowers to Tier 2."""
+    q = (Q.scan("lineitem")
+         .project(l_quantity=C("l_quantity") * 0.0 + 50.0)
+         .group_agg(keys=[("returnflag", C("l_returnflag"), 3)],
+                    aggs=[("sum_qty", "sum", C("l_quantity"))]))
+    assert cubed_driver.router.route_query(q) is None
+    ans = cubed_driver.query(q)
+    assert ans.tier == 2
+
+
+def test_uncovered_unlowerable_raises_typed_error(cubed_driver):
+    """min/max measures are cube-only; with an off-edge filter no rollup
+    covers the query and lowering refuses — a typed UncoveredQueryError,
+    not a bare KeyError/LookupError."""
+    q = (Q.scan("orders")
+         .filter(C("o_orderdate") <= DP.q4_date_min + 7)  # not a bin edge
+         .group_agg(keys=[("orderstatus", C("o_orderstatus"), 3)],
+                    aggs=[("min_totalprice", "min", C("o_totalprice"))]))
+    with pytest.raises(UncoveredQueryError):
         cubed_driver.query(q)
 
 
