@@ -5,7 +5,7 @@
 
 PYTEST ?= python -m pytest
 
-.PHONY: test test-fast bench-cubes
+.PHONY: test test-fast bench-cubes bench-smoke
 
 test:
 	$(PYTEST) -q
@@ -15,3 +15,11 @@ test-fast:
 
 bench-cubes:
 	PYTHONPATH=src python -m benchmarks.cube_speedup --sf 0.05
+
+# tiny-scale smoke of the perf benchmarks (CI runs this and uploads the
+# JSON from experiments/bench/ as an artifact).  exchange_compression is a
+# GATE (non-zero exit below 4x / on oracle mismatch); ir_overhead is a
+# REPORT — its <5% latency target is too noisy to fail CI on shared runners
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.exchange_compression --sf 0.02 --repeat 5
+	PYTHONPATH=src python -m benchmarks.ir_overhead --sf 0.02 --repeat 5

@@ -1,0 +1,173 @@
+"""Wire-format benchmark: packed vs raw exchange encodings (§3.2.1).
+
+The exchange layer can ship its request buckets either as raw int32 keys +
+a separate bool-mask all-to-all, or as the packed wire format (EF-coded
+keys at catalog-derived widths, mask folded in, bitset replies).  This
+benchmark proves the reduction FROM THE LOWERED HLO — the all-to-all
+operand bytes of the compiled SPMD plan — on the q4/q18 semi-join
+exchanges (the Q4/Q18 shapes forced through the §3.2.2 request exchange),
+and checks that every lowered plan still matches its numpy oracle under
+``wire="packed"`` on both collective backends.
+
+Acceptance: packed reduces all-to-all bytes by >= 4x on q4_sj/q18_sj.
+Paired raw/packed latencies land with the byte counts in
+``experiments/bench/exchange_compression.json``.
+
+  PYTHONPATH=src python -m benchmarks.exchange_compression --sf 0.02
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import plans as plan_registry
+from repro.launch.roofline import parse_collective_bytes
+from repro.query.lower import lower
+from repro.tpch import queries as tq
+from repro.tpch.driver import TPCHDriver
+from repro.tpch.schema import DEFAULT_PARAMS as DP
+
+GATE_REDUCTION = 4.0
+SJ_QTY = 250.0  # q18_sj volume threshold (low enough to keep survivors)
+
+# the oracle-parity set: every lowered-IR query with a numpy oracle
+PARITY = ("q1", "q4", "q6", "q18")
+BACKENDS = ("xla", "one_factor")
+
+
+def _compile(driver, q, *, wire: str, backend: str = "xla"):
+    """Lower + compile one IR query under an explicit wire format/backend
+    (bypassing the driver's cached context)."""
+    plan = lower(q, driver.catalog, wire=wire)
+    ctx = dataclasses.replace(driver.ctx, wire=wire, backend=backend)
+    return driver.cluster.compile(plan, ctx, driver.placed)
+
+
+def _collectives(fn, cols):
+    return parse_collective_bytes(fn.lower(cols).compile().as_text())
+
+
+def _clock(fn, cols) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(cols))
+    return time.perf_counter() - t0
+
+
+def _q18_sj_oracle(driver, qty: float, segment: int):
+    o = driver.tables["orders"].columns
+    li = driver.tables["lineitem"].columns
+    c = driver.tables["customer"].columns
+    sq = np.zeros(o["o_orderkey"].shape[0])
+    np.add.at(sq, li["l_orderkey"], li["l_quantity"].astype(np.float64))
+    sel = (sq > qty) & (c["c_mktsegment"][o["o_custkey"]] == segment)
+    return np.array([sq[sel].sum(), sel.sum()])
+
+
+def run(sf: float = 0.02, repeat: int = 30, seed: int = 0):
+    driver = TPCHDriver(sf=sf, seed=seed)
+    cols = {n: t.columns for n, t in driver.placed.items()}
+
+    targets = [
+        ("q4_sj", tq.q4_sj_ir(alt="request"),
+         np.asarray(driver.oracle("q4"), np.float64),
+         lambda out: np.asarray(out["value"], np.float64)[:, 0]),
+        ("q18_sj", tq.q18_sj_ir(alt="request", qty=SJ_QTY),
+         _q18_sj_oracle(driver, SJ_QTY, DP.q3_segment),
+         lambda out: np.asarray(out["value"], np.float64).reshape(-1)),
+    ]
+
+    rows, ok = [], True
+    for name, q, oracle, extract in targets:
+        fns = {w: _compile(driver, q, wire=w) for w in ("raw", "packed")}
+        coll = {w: _collectives(fns[w], cols) for w in fns}
+        outs = {}
+        for w, fn in fns.items():
+            out = jax.tree.map(np.asarray, fn(cols))
+            assert not out.get("overflow", False), f"{name}/{w} overflowed"
+            outs[w] = extract(out)
+        a2a = {w: coll[w].bytes_by_op.get("all-to-all", 0) for w in fns}
+        reduction = a2a["raw"] / max(a2a["packed"], 1)
+        # paired warm latencies: median of back-to-back ratios (robust to
+        # host drift, same protocol as benchmarks/ir_overhead.py)
+        for fn in fns.values():
+            jax.block_until_ready(fn(cols))
+        raw_times, ratios = [], []
+        for _ in range(max(repeat, 5)):
+            r = _clock(fns["raw"], cols)
+            p = _clock(fns["packed"], cols)
+            raw_times.append(r)
+            ratios.append(p / r)
+        ratios.sort()
+        raw_ms = min(raw_times) * 1e3
+        packed_ms = raw_ms * ratios[len(ratios) // 2]
+        oracle_ok = (np.allclose(outs["raw"], oracle, rtol=1e-4)
+                     and np.allclose(outs["packed"], oracle, rtol=1e-4))
+        ok &= oracle_ok and reduction >= GATE_REDUCTION
+        for w in ("raw", "packed"):
+            rows.append({
+                "query": name, "wire": w,
+                "all_to_all_bytes": a2a[w],
+                "all_to_all_count": coll[w].count_by_op.get("all-to-all", 0),
+                "latency_ms": raw_ms if w == "raw" else packed_ms,
+                "reduction_x": 1.0 if w == "raw" else reduction,
+                "oracle_ok": oracle_ok,
+            })
+    emit("exchange_compression", rows,
+         ["query", "wire", "all_to_all_bytes", "all_to_all_count",
+          "latency_ms", "reduction_x", "oracle_ok"])
+
+    # oracle parity of the standard lowered queries under packed wire, on
+    # both collective backends (one_factor lowers all-to-all to ppermutes)
+    parity_rows = []
+    for name in PARITY:
+        q = plan_registry.get(name).ir
+        ref = driver.oracle(name)
+        for backend in BACKENDS:
+            out = jax.tree.map(
+                np.asarray,
+                _compile(driver, q, wire="packed", backend=backend)(cols),
+            )
+            if name == "q18":
+                ov, okeys = ref
+                n = int(out["valid"].sum())
+                match = (n == int(np.isfinite(ov).sum())
+                         and np.allclose(out["values"][:n], ov[:n],
+                                         rtol=2e-3, atol=1e-2)
+                         and np.array_equal(out["keys"][:n], okeys[:n]))
+            elif name == "q4":
+                match = np.array_equal(out["value"][:, 0], ref)
+            else:
+                match = np.allclose(np.asarray(out["value"]).reshape(np.shape(ref)),
+                                    ref, rtol=2e-4)
+            ok &= bool(match)
+            parity_rows.append({"query": name, "backend": backend,
+                                "wire": "packed", "oracle_ok": bool(match)})
+    emit("exchange_compression_parity", parity_rows,
+         ["query", "backend", "wire", "oracle_ok"])
+
+    worst = min(r["reduction_x"] for r in rows if r["wire"] == "packed")
+    status = "OK" if ok else "FAILED"
+    print(f"\npacked wire all-to-all reduction: {worst:.1f}x "
+          f"(>= {GATE_REDUCTION:.0f}x target, oracle parity on "
+          f"{'/'.join(PARITY)} x {'/'.join(BACKENDS)}: {status})")
+    return rows, parity_rows, ok
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--sf", type=float, default=0.02)
+    p.add_argument("--repeat", type=int, default=30)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+    _, _, ok = run(sf=args.sf, repeat=args.repeat, seed=args.seed)
+    sys.exit(0 if ok else 1)

@@ -13,6 +13,7 @@
 | sampling head ablation  | (ours)    | benchmarks.sampling_bench   |
 | cube tier-1 speedup     | (ours)    | benchmarks.cube_speedup     |
 | lowered-IR overhead     | (ours)    | benchmarks.ir_overhead      |
+| exchange wire formats   | §3.2.1    | benchmarks.exchange_compression |
 
 Every section persists machine-readable JSON under ``experiments/bench/``
 (via ``benchmarks.common.emit``) alongside the printed markdown table.
@@ -37,7 +38,8 @@ def main(argv=None):
     p.add_argument("--sections", nargs="*", default=None)
     args = p.parse_args(argv)
 
-    from benchmarks import (compiled_speedup, cube_speedup, ir_overhead,
+    from benchmarks import (compiled_speedup, cube_speedup,
+                            exchange_compression, ir_overhead,
                             power_test, q15_topk, roofline_report,
                             sampling_bench, semijoin_cost, weak_scaling)
 
@@ -47,6 +49,9 @@ def main(argv=None):
         "ir_overhead": lambda: ir_overhead.run(
             sf=0.02 if args.quick else 0.05,
             repeat=15 if args.quick else 60),
+        "exchange_compression": lambda: exchange_compression.run(
+            sf=0.02 if args.quick else 0.05,
+            repeat=5 if args.quick else 30),
         "weak_scaling": lambda: weak_scaling.run(repeat=2 if args.quick else 3),
         "q15_topk": lambda: (q15_topk.run(sf=0.01 if args.quick else 0.02),
                              q15_topk.sweep_m(sf=0.01 if args.quick else 0.02)),

@@ -51,7 +51,8 @@ def main():
         t0 = time.monotonic()
         out = driver.run(v)
         jax.block_until_ready(out)
-        topk = out
+        # q3_lazy returns (winners, overflow); the others a bare TopK
+        topk = out[0] if isinstance(out, tuple) and not hasattr(out, "keys") else out
         keys = np.asarray(topk.keys if hasattr(topk, "keys") else topk[1])[:3]
         print(f"  {v:8s} top orders {keys.tolist()}  "
               f"({(time.monotonic()-t0)*1e3:.0f} ms incl. host)")

@@ -134,9 +134,18 @@ def alt1_bits(n: float, m: float, P: int) -> float:
 
 def alt2_bits(m: float, gamma: float) -> float:
     """Replicated-bitset semi-join: γm qualifying rows of an m-row table:
-    γ·m·log2(1/γ) bits (information content of the bitset)."""
-    if gamma <= 0 or gamma >= 1:
-        return float(m) if 0 < gamma < 1 else (0.0 if gamma <= 0 else float(m))
+    γ·m·log2(1/γ) bits (information content of the bitset).
+
+    Degenerate selectivities are explicit branches, not a fused ternary:
+    γ <= 0 selects nothing — an all-zero bitset carries no information,
+    0 bits; γ >= 1 selects everything — the entropy is also ~0, but the
+    engine still ships the m-bit bitset, so the model charges the m raw
+    bits actually communicated (the paper's curve is only defined on the
+    open interval)."""
+    if gamma <= 0:
+        return 0.0
+    if gamma >= 1:
+        return float(m)
     return gamma * m * float(np.log2(1.0 / gamma))
 
 
@@ -146,3 +155,81 @@ def choose_semijoin(n: float, m: float, gamma: float, P: int) -> int:
     if n / P > m:
         return 2
     return 1 if alt1_bits(n, m, P) <= alt2_bits(m, gamma) else 2
+
+
+# ---------------------------------------------------------------------------
+# packed wire format parameters (shared by the exchange codec and the
+# byte-accurate cost model, so the model is exact by construction)
+# ---------------------------------------------------------------------------
+
+
+def bitset_words(n: int) -> int:
+    """uint32 words of an n-bit packed bitset."""
+    return (max(n, 0) + 31) // 32
+
+
+def ef_params(capacity: int, domain: int) -> tuple:
+    """Elias–Fano split for ``capacity`` SORTED keys drawn from a
+    per-destination domain of ``domain`` values: returns
+    ``(l, upper_words, lower_words)``.
+
+    Each key splits into ``l = max(0, floor(log2(domain / capacity)))``
+    low bits (fixed-width packed — the "catalog-derived width" part) and a
+    high part encoded in unary in a bitvector of ``capacity +
+    ceil(domain / 2^l)`` bits (the delta part: ~2 bits/key regardless of
+    the domain).  Static shapes by construction — valid for ANY sorted
+    bucket content, no exception path."""
+    c = max(1, int(capacity))
+    d = max(1, int(domain))
+    l = max(0, (d // c).bit_length() - 1)
+    upper_bits = c + ((d - 1) >> l) + 1
+    lw = packed_words(c, l) if l else 0
+    return l, (upper_bits + 31) // 32, lw
+
+
+def packed_request_words(capacity: int, domain: int) -> int:
+    """uint32 words of one packed request row: EF upper bitvector + EF
+    lower bits + the folded validity-mask bitset."""
+    l, uw, lw = ef_params(capacity, domain)
+    return uw + lw + bitset_words(capacity)
+
+
+# ---------------------------------------------------------------------------
+# byte-accurate §3.2.2 model: STATIC wire bytes of the compiled exchanges
+# (what the lowered HLO actually ships), not the information bound above
+# ---------------------------------------------------------------------------
+
+
+def alt1_wire_bytes(capacity: int, P: int, domain: int = 0, *,
+                    packed: bool = True, reply_bytes: int = 1) -> float:
+    """Per-node bytes injected by the Alt-1 request/reply exchange at the
+    plan's static buffer shapes: P-1 remote destination rows of
+    ``capacity`` slots, requests plus replies.  raw = int32 key + bool
+    mask + reply byte(s) per slot; packed = EF-coded keys with the mask
+    folded in.  On packed wire only 1-byte (boolean) replies ship as a
+    bitset — wider replies travel raw, exactly as ``request_reply``
+    compiles them."""
+    rows = max(P - 1, 1)
+    if packed and domain > 0:
+        reply_words = (bitset_words(capacity) if reply_bytes == 1
+                       else -(-capacity * reply_bytes // 4))
+        words = packed_request_words(capacity, domain) + reply_words
+        return float(rows * words * 4)
+    return float(rows * capacity * (4 + 1 + reply_bytes))
+
+
+def alt2_wire_bytes(m: float, P: int) -> float:
+    """Per-node bytes of the Alt-2 replicated bitset: the local partition's
+    packed predicate bits (m/P rows), allgathered to the other P-1 nodes.
+    Identical under raw and packed wire — Alt-2 always ships packed words."""
+    local = (int(m) + max(P, 1) - 1) // max(P, 1)
+    return float(max(P - 1, 1) * bitset_words(local) * 4)
+
+
+def choose_semijoin_wire(capacity: int, m: float, P: int, *,
+                         domain: int = 0, packed: bool = True) -> int:
+    """Byte-accurate alternative choice: compare the STATIC wire bytes of
+    the compiled Alt-1 exchange (at its derived capacity and actual packed
+    widths) against the Alt-2 bitset allgather.  Returns 1 or 2."""
+    a1 = alt1_wire_bytes(capacity, P, domain, packed=packed)
+    return 1 if a1 <= alt2_wire_bytes(m, P) else 2

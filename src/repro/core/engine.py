@@ -19,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.columnar import Table, shard_table
+from repro.core.exchange import WireFormat
 from repro.core.partitioning import RangePartitioning
 
 
@@ -32,12 +33,23 @@ class PlanContext:
     capacities: Mapping[str, int]            # plan-specific buffer capacities
     backend: str = "xla"                     # all-to-all backend
     scale_factor: float = 1.0
+    wire: str = "packed"                     # exchange wire format selector
+    wires: Mapping[str, WireFormat] = dataclasses.field(default_factory=dict)
 
     def part(self, table: str) -> RangePartitioning:
         return self.parts[table]
 
     def cap(self, name: str, default: int = 4096) -> int:
         return int(self.capacities.get(name, default))
+
+    def wire_fmt(self, name: str) -> WireFormat:
+        """Wire format of the named exchange (derived in
+        ``repro.tpch.capacities`` for the hand plans, ``repro.query.stats``
+        inside the lowering); raw when the context disables packing or no
+        format was derived for this exchange."""
+        if self.wire != "packed":
+            return WireFormat.raw()
+        return self.wires.get(name, WireFormat.raw())
 
 
 class Cluster:
@@ -60,7 +72,8 @@ class Cluster:
         return shard_table(table, self.mesh, self.axis)
 
     def context(self, tables: Mapping[str, Table], capacities=None, *,
-                backend: str = "xla", scale_factor: float = 1.0) -> PlanContext:
+                backend: str = "xla", scale_factor: float = 1.0,
+                wire: str = "packed", wires=None) -> PlanContext:
         parts = {
             name: RangePartitioning(t.num_rows, 1 if t.replicated else self.num_nodes)
             for name, t in tables.items()
@@ -72,6 +85,8 @@ class Cluster:
             capacities=dict(capacities or {}),
             backend=backend,
             scale_factor=scale_factor,
+            wire=wire,
+            wires=dict(wires or {}),
         )
 
     # -- compilation -------------------------------------------------------
@@ -98,11 +113,12 @@ class Cluster:
         return jax.jit(sharded)
 
     def run(self, plan: Callable, tables: Mapping[str, Table], capacities=None,
-            *, backend: str = "xla", scale_factor: float = 1.0):
+            *, backend: str = "xla", scale_factor: float = 1.0,
+            wire: str = "packed", wires=None):
         """Convenience: shard, compile, execute; returns host results."""
         placed = {name: self.load(t) for name, t in tables.items()}
         ctx = self.context(placed, capacities, backend=backend,
-                           scale_factor=scale_factor)
+                           scale_factor=scale_factor, wire=wire, wires=wires)
         fn = self.compile(plan, ctx, placed)
         columns = {name: t.columns for name, t in placed.items()}
         return jax.tree.map(lambda x: jax.device_get(x), fn(columns))

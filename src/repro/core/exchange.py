@@ -1,4 +1,5 @@
-"""Inter-node communication layer (paper §3.2.6, §4.2).
+"""Inter-node communication layer (paper §3.2.6, §4.2) and its wire codec
+(§3.2.1).
 
 The paper exchanges data with MPI collectives (gather, allgather, scatter,
 personalized all-to-all, reduce/allreduce with user-defined operators) and a
@@ -11,16 +12,59 @@ round ``i`` is ``(i - u) mod P``) — the ICI analogue of the paper's
 non-blocking point-to-point schedule.  Both run inside ``shard_map`` over the
 ``nodes`` axis, and benchmarks compare them from the lowered HLO.
 
+Wire formats
+------------
+
+Exchanged key sets are delta- and bit-packed before they hit the wire
+(paper §3.2.1); a :class:`WireFormat` selects between:
+
+``raw``     int32 key buckets + a separate bool-mask collective (+ a third
+            collective for replies / values): 6–9 bytes per slot.
+
+``packed``  one uint32 buffer per exchange.  Keys are made destination-
+            relative (``key - dest * domain`` — every key routed to owner
+            ``d`` of a range-partitioned table lies in ``[d*domain,
+            (d+1)*domain)``), sorted, and Elias–Fano coded: the low
+            ``l = floor(log2(domain/capacity))`` bits are fixed-width
+            bit-packed (the catalog-derived width), the high bits are
+            unary-coded in a bitvector — the static-shape form of
+            delta coding, ~``l + 2`` bits/key for ANY bucket content.
+            The validity mask is folded into the same payload as appended
+            bitset words, eliminating the separate mask collective.
+
+            Packed message layout, per destination row (uint32 words)::
+
+              [ EF upper bitvector | EF lower bits | mask bitset | values ]
+                capacity+domain/2^l  capacity*l/32   capacity/32   capacity
+                bits (unary highs)   (packed lows)   (validity)    (fused
+                                                                  payload,
+                                                         exchange_by_owner
+                                                                    only)
+
+            Replies travel back as a packed bitset when they are boolean
+            (the semi-join case), so a full request/reply round trip ships
+            ``~(l + 4)/8`` bytes per slot instead of 6.
+
+Packed buckets must be sorted ascending per destination; ``request_reply``
+and ``exchange_by_owner`` pre-sort their inputs by key (the paper sorts key
+sets before shipping them for better compression — §5.3) and scatter
+replies back to the caller's original order.  The §3.2.2 byte-accurate cost
+model in ``repro.core.compression`` shares ``ef_params`` with this codec,
+so its Alt-1/Alt-2 choice reflects these exact wire shapes.
+
 All functions here are called INSIDE shard_map; arrays are per-device views.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.core import compression
 
 # ---------------------------------------------------------------------------
 # basic collectives (thin wrappers so plans read like the paper's pseudocode)
@@ -141,6 +185,118 @@ def butterfly_allreduce(state, merge: Callable, axis: str = "nodes"):
 
 
 # ---------------------------------------------------------------------------
+# wire codec: m-bit packed key buckets with the validity mask folded in
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Wire encoding of an exchange (see module docstring for the layout).
+
+    ``domain`` is the per-destination key domain — ``rows_per_node`` of the
+    range-partitioned target table, so every key routed to destination
+    ``d`` lies in ``[d*domain, (d+1)*domain)``.  ``key_bits`` is the
+    catalog-derived ``required_width(domain - 1)`` (informational; the
+    codec derives its exact split from ``domain`` and the capacity)."""
+
+    kind: str = "raw"   # "raw" | "packed"
+    domain: int = 0     # per-destination key domain (target rows_per_node)
+    key_bits: int = 0   # required_width(domain - 1)
+
+    @property
+    def packed(self) -> bool:
+        return self.kind == "packed" and self.domain > 0
+
+    @classmethod
+    def raw(cls) -> "WireFormat":
+        return cls()
+
+    @classmethod
+    def packed_for(cls, total_rows: int, num_nodes: int) -> "WireFormat":
+        dom = max(1, int(total_rows) // max(num_nodes, 1))
+        return cls(kind="packed", domain=dom,
+                   key_bits=compression.required_width(dom - 1))
+
+
+def _pack_mask_rows(mask):
+    """(P, c) bool -> (P, ceil(c/32)) uint32 bitset rows."""
+    c = mask.shape[1]
+    pad = (-c) % 32
+    if pad:
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    return jax.vmap(compression.pack_bitset)(mask)
+
+
+def _unpack_mask_rows(words, c: int):
+    return jax.vmap(lambda w: compression.unpack_bitset(w, c))(words)
+
+
+def encode_key_buckets(buckets, bucket_mask, wf: WireFormat):
+    """Encode (P, capacity) key buckets into the packed wire message
+    (P, packed_request_words) uint32.  Valid keys of row ``d`` MUST be a
+    sorted ascending prefix with values in ``[d*domain, (d+1)*domain)`` —
+    ``bucket_by_destination`` on key-sorted input produces exactly that."""
+    P, cap = buckets.shape
+    l, uw, _ = compression.ef_params(cap, wf.domain)
+    offs = buckets.astype(jnp.int32) - jnp.arange(P, dtype=jnp.int32)[:, None] * wf.domain
+    offs = jnp.clip(jnp.where(bucket_mask, offs, 0), 0, wf.domain - 1).astype(jnp.uint32)
+    j = jnp.arange(cap, dtype=jnp.uint32)[None, :]
+    pos = (offs >> l) + j                 # strictly increasing per row
+    rows = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[:, None], (P, cap))
+    word = jnp.where(bucket_mask, (pos >> 5).astype(jnp.int32), uw)
+    upper = jnp.zeros((P, uw), jnp.uint32).at[rows, word].add(
+        jnp.uint32(1) << (pos & jnp.uint32(31)), mode="drop"
+    )
+    parts = [upper]
+    if l:
+        lo = offs & jnp.uint32((1 << l) - 1)
+        parts.append(jax.vmap(lambda v: compression.pack_bits(v, l))(lo))
+    parts.append(_pack_mask_rows(bucket_mask))
+    return jnp.concatenate(parts, axis=1)
+
+
+def decode_key_buckets(words, capacity: int, wf: WireFormat, my_base):
+    """Inverse of :func:`encode_key_buckets` on the receiving node: returns
+    (global keys (P, capacity) int32, mask (P, capacity) bool).  ``my_base``
+    is the receiver's first owned key (``rank * domain``)."""
+    P = words.shape[0]
+    l, uw, lw = compression.ef_params(capacity, wf.domain)
+    upper = words[:, :uw]
+    # unary-decoded high bits: position of the (j+1)-th set bit, minus j
+    lane = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = ((upper[:, :, None] >> lane) & jnp.uint32(1)).reshape(P, uw * 32)
+    on = bits.astype(bool)
+    rank = jnp.cumsum(bits, axis=1).astype(jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[:, None], bits.shape)
+    tgt = jnp.where(on, rank - 1, capacity)     # <= capacity bits set per row
+    posv = jnp.broadcast_to(
+        jnp.arange(uw * 32, dtype=jnp.int32)[None, :], bits.shape
+    )
+    sel = jnp.zeros((P, capacity), jnp.int32).at[rows, tgt].add(posv, mode="drop")
+    j = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    hi = sel - j
+    if l:
+        lo = jax.vmap(lambda w: compression.unpack_bits(w, capacity, l))(
+            words[:, uw:uw + lw]
+        ).astype(jnp.int32)
+    else:
+        lo = jnp.zeros((P, capacity), jnp.int32)
+    mask = _unpack_mask_rows(words[:, uw + lw:uw + lw + compression.bitset_words(capacity)],
+                             capacity)
+    keys = jnp.where(mask, my_base + ((hi << l) | lo), 0).astype(jnp.int32)
+    return keys, mask
+
+
+def _sort_by_key(keys, *aligned):
+    """Pre-sort an exchange's inputs by key value so per-destination buckets
+    come out ascending (the packed codec's precondition; §5.3 — the paper
+    sorts key sets before shipping for better compression).  Returns the
+    permutation (for scattering results back) and the reordered arrays."""
+    order = jnp.argsort(keys)
+    return (order, keys[order]) + tuple(a[order] for a in aligned)
+
+
+# ---------------------------------------------------------------------------
 # request/reply exchange for remote lookups (paper §3.2.2 Alternative 1)
 # ---------------------------------------------------------------------------
 
@@ -194,6 +350,7 @@ def request_reply(
     axis: str = "nodes",
     backend: str = "xla",
     reply_dtype=None,
+    wire: Optional[WireFormat] = None,
 ):
     """The paper's explicit remote request pattern (§3.2.2 Alt-1):
 
@@ -204,15 +361,33 @@ def request_reply(
     4. a second all-to-all returns the replies, scattered back to the
        original key order.
 
+    With a packed ``wire`` the request keys are Elias–Fano coded at their
+    catalog-derived width with the validity mask folded into the same
+    uint32 buffer (ONE request collective instead of two), and boolean
+    replies travel back as a packed bitset.  Packed wire requires the
+    destinations to be the owners of a range-partitioned key space with
+    ``wire.domain`` rows per node.
+
     Returns (replies aligned with ``keys``, overflow flag).
     """
     P = lax.axis_size(axis)
+    wf = wire or WireFormat.raw()
+    order = None
+    if wf.packed:
+        order, keys, mask, owner = _sort_by_key(keys, mask, owner)
     buckets, bucket_mask, (dest_of_key, slot_of_key), overflow = (
         bucket_by_destination(keys, mask, owner, P, capacity)
     )
     # ship requests to owners
-    req = all_to_all(buckets, axis, backend=backend)
-    req_mask = all_to_all(bucket_mask, axis, backend=backend)
+    if wf.packed:
+        msg = encode_key_buckets(buckets, bucket_mask, wf)
+        my_base = lax.axis_index(axis) * wf.domain
+        req, req_mask = decode_key_buckets(
+            all_to_all(msg, axis, backend=backend), capacity, wf, my_base
+        )
+    else:
+        req = all_to_all(buckets, axis, backend=backend)
+        req_mask = all_to_all(bucket_mask, axis, backend=backend)
     # owners evaluate the lookup on their partition
     flat_req = req.reshape(P * capacity)
     flat_mask = req_mask.reshape(P * capacity)
@@ -220,12 +395,18 @@ def request_reply(
     if reply_dtype is not None:
         replies = replies.astype(reply_dtype)
     replies = replies.reshape(P, capacity)
-    # ship replies back
-    back = all_to_all(replies, axis, backend=backend)
+    # ship replies back (boolean replies as a packed bitset on packed wire)
+    if wf.packed and replies.dtype == jnp.bool_:
+        back_words = all_to_all(_pack_mask_rows(replies), axis, backend=backend)
+        back = _unpack_mask_rows(back_words, capacity)
+    else:
+        back = all_to_all(replies, axis, backend=backend)
     # gather each key's reply from (dest, slot); masked keys point at the
     # (clamped) out-of-bounds row, so zero them explicitly
     out = back[jnp.minimum(dest_of_key, P - 1), slot_of_key]
     out = jnp.where(mask, out, jnp.zeros_like(out))
+    if order is not None:
+        out = jnp.zeros_like(out).at[order].set(out)  # undo the wire sort
     return out, overflow
 
 
@@ -243,14 +424,26 @@ def exchange_by_owner(
     capacity: int,
     axis: str = "nodes",
     backend: str = "xla",
+    wire: Optional[WireFormat] = None,
 ):
     """Route (key, value) pairs to the owner node of each key (used when a
     group-by key lies on a remote join path — paper Q13/Q15/Q21).
+
+    With a packed ``wire`` (and a 4-byte value dtype) the packed key
+    buckets, the folded validity mask AND the bitcast value buckets fuse
+    into ONE uint32 buffer, so the whole exchange is a single collective
+    instead of three.  Received slot order is then per-sender key-sorted
+    (callers are order-agnostic: they scatter by the received keys).
 
     Returns (recv_keys, recv_values, recv_mask, overflow): the pairs this
     node received, shape (P, capacity).
     """
     P = lax.axis_size(axis)
+    wf = wire or WireFormat.raw()
+    fused = wf.packed and values.dtype.itemsize == 4
+    if fused:
+        # no un-sort needed: callers consume the received buckets by key
+        _, keys, values, mask, owner = _sort_by_key(keys, values, mask, owner)
     buckets, bucket_mask, (dest_of_key, slot_of_key), overflow = (
         bucket_by_destination(keys, mask, owner, P, capacity)
     )
@@ -258,6 +451,20 @@ def exchange_by_owner(
     # masked keys carry dest == P (out of bounds) and are dropped
     vbuckets = vbuckets.at[dest_of_key, slot_of_key].set(values, mode="drop")
     vbuckets = jnp.where(bucket_mask, vbuckets, 0)
+    if fused:
+        msg = jnp.concatenate(
+            [encode_key_buckets(buckets, bucket_mask, wf),
+             lax.bitcast_convert_type(vbuckets, jnp.uint32)],
+            axis=1,
+        )
+        recv = all_to_all(msg, axis, backend=backend)
+        my_base = lax.axis_index(axis) * wf.domain
+        recv_keys, recv_mask = decode_key_buckets(
+            recv[:, :-capacity], capacity, wf, my_base
+        )
+        recv_vals = lax.bitcast_convert_type(recv[:, -capacity:], values.dtype)
+        recv_vals = jnp.where(recv_mask, recv_vals, 0)
+        return recv_keys, recv_vals, recv_mask, overflow
     recv_keys = all_to_all(buckets, axis, backend=backend)
     recv_vals = all_to_all(vbuckets, axis, backend=backend)
     recv_mask = all_to_all(bucket_mask, axis, backend=backend)

@@ -170,6 +170,7 @@ def q21_late(ctx, t, p=DP, k: int = 100):
     bits, ovf = semijoin.alt1_request(
         all_sup_keys, active, sup_part, nation_pred,
         capacity=ctx.cap("q21_request", 1024), axis=ctx.axis, backend=ctx.backend,
+        wire=ctx.wire_fmt("q21_request"),
     )
     partials = jnp.where(bits, partials, 0.0)
     winners = _q21_finish(ctx, t, partials, k)

@@ -38,6 +38,7 @@ def q2(ctx, t, p=DP, k: int = 100):
     bits, ovf1 = semijoin.alt1_request(
         ps["ps_suppkey"], ps_part_ok, sup_part, region_pred,
         capacity=ctx.cap("q2_request", 512), axis=ctx.axis, backend=ctx.backend,
+        wire=ctx.wire_fmt("q2_request"),
     )
     cand = ps_part_ok & bits
     # min supplycost per part (local: partsupp co-partitioned with part)
@@ -55,6 +56,7 @@ def q2(ctx, t, p=DP, k: int = 100):
         ps["ps_suppkey"], ps["ps_partkey"].astype(jnp.float32), is_min,
         sup_part.owner(ps["ps_suppkey"]),
         capacity=ctx.cap("q2_owner", 512), axis=ctx.axis, backend=ctx.backend,
+        wire=ctx.wire_fmt("q2_owner"),
     )
     rs = recv_sup.reshape(-1)
     rp = recv_part.reshape(-1).astype(jnp.int32)
@@ -116,6 +118,7 @@ def q3_lazy(ctx, t, p=DP, k: int = 10):
         return semijoin.alt1_request(
             custkeys, mask, cust_part, seg_pred,
             capacity=ctx.cap("q3_chunk", 256), axis=ctx.axis, backend=ctx.backend,
+            wire=ctx.wire_fmt("q3_request"),
         )
 
     winners, overflow = topk.lazy_filtered_topk(
@@ -124,7 +127,7 @@ def q3_lazy(ctx, t, p=DP, k: int = 10):
         max_rounds=ctx.cap("q3_rounds", 64),
         axis=ctx.axis,
     )
-    return winners
+    return winners, overflow
 
 
 def q3_repl(ctx, t, p=DP, k: int = 10):
@@ -165,6 +168,7 @@ def q5(ctx, t, p=DP):
         o["o_custkey"], o_ok, cust_part.owner(o["o_custkey"]),
         nation_lookup, capacity=ctx.cap("q5_request", 2048),
         axis=ctx.axis, backend=ctx.backend, reply_dtype=jnp.int32,
+        wire=ctx.wire_fmt("q5_request"),
     )
     l_order_local = local_index(ctx, "orders", li["l_orderkey"])
     l_sup_nat = s_nat_all[li["l_suppkey"]]
@@ -211,6 +215,7 @@ def q13(ctx, t, p=DP, hist_cap: int = 64):
         o["o_custkey"], jnp.ones_like(o["o_custkey"], dtype=jnp.float32), sel,
         cust_part.owner(o["o_custkey"]),
         capacity=ctx.cap("q13_route", 4096), axis=ctx.axis, backend=ctx.backend,
+        wire=ctx.wire_fmt("q13_route"),
     )
     rows = cust_part.rows_per_node
     local_idx = jnp.where(
@@ -242,6 +247,7 @@ def q14(ctx, t, p=DP):
     promo, ovf = semijoin.alt1_request(
         li["l_partkey"], sel, ctx.part("part"), promo_pred,
         capacity=ctx.cap("q14_request", 2048), axis=ctx.axis, backend=ctx.backend,
+        wire=ctx.wire_fmt("q14_request"),
     )
     rev = revenue(li)
     total = lax.psum(jnp.sum(jnp.where(sel, rev, 0.0)), ctx.axis)

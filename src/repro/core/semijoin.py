@@ -33,11 +33,15 @@ def alt1_request(
     capacity: int,
     axis: str = "nodes",
     backend: str = "xla",
+    wire=None,
 ):
     """Request-based semi-join: returns (bits aligned with keys, overflow).
 
     ``local_predicate(local_indices, mask) -> bool bits`` evaluates the
     remote predicate on the OWNER's partition, given local row indices.
+    ``wire`` selects the exchange encoding (``exchange.WireFormat``;
+    default raw) — a packed format ships EF-coded requests with the mask
+    folded in and bitset-packed reply bits.
     """
     def lookup(req_keys, req_mask):
         local_idx = part.local_index(req_keys)
@@ -52,6 +56,7 @@ def alt1_request(
         axis=axis,
         backend=backend,
         reply_dtype=jnp.bool_,
+        wire=wire,
     )
     return bits & mask, overflow
 
@@ -83,7 +88,10 @@ def probe(global_bitset_words, keys, part: RangePartitioning):
     return compression.probe_bitset(global_bitset_words, bit_index)
 
 
-# re-export the paper's cost model
+# re-export the paper's cost model (info-theoretic + byte-accurate wire)
 alt1_bits = compression.alt1_bits
 alt2_bits = compression.alt2_bits
 choose_alternative = compression.choose_semijoin
+alt1_wire_bytes = compression.alt1_wire_bytes
+alt2_wire_bytes = compression.alt2_wire_bytes
+choose_alternative_wire = compression.choose_semijoin_wire

@@ -59,12 +59,19 @@ class CollectiveStats:
         return sum(self.bytes_by_op.values())
 
 
+_HLO_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
 def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
     """Sum operand bytes of every collective in the (partitioned) module.
 
     Two passes: (1) instruction name -> result shape, (2) for collectives,
     add up their operands' shapes (operands referenced by name; start ops
-    like all-reduce-start are counted, matching -done ops are not)."""
+    like all-reduce-start are counted, matching -done ops are not).
+    Inline ``/*index=N*/`` comments are stripped first — wide tuple shapes
+    (e.g. an 8-way decomposed all-to-all) embed them, and the '=' inside
+    would otherwise stop the instruction regex from matching at all."""
+    hlo_text = _HLO_COMMENT_RE.sub("", hlo_text)
     shapes: dict[str, str] = {}
     for line in hlo_text.splitlines():
         m = _INSTR_RE.match(line)

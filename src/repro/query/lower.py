@@ -43,7 +43,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import aggregation, late_materialization, semijoin, topk
-from repro.core.compression import choose_semijoin
+from repro.core.compression import choose_semijoin_wire
+from repro.core.exchange import WireFormat
 from repro.query import stats as qstats
 from repro.query.ir import (
     Agg,
@@ -92,11 +93,16 @@ class _SemiJoinPlan:
     alt: str        # local | request | bitset
     capacity: int   # derived request-exchange bucket capacity (0 if unused)
     key: str = ""   # PlanContext.capacities override key ("<name>_sj<i>")
+    wire: WireFormat = WireFormat.raw()  # packed format of the exchange
 
 
-def _decide_semijoins(root, catalog: Catalog, query_name=None) -> dict:
+def _decide_semijoins(root, catalog: Catalog, query_name=None,
+                      wire: str = "packed") -> dict:
     """Choose each SemiJoin's physical alternative and buffer capacity from
-    the §3.2.2 model, using selectivities accumulated along the chain."""
+    the §3.2.2 model, using selectivities accumulated along the chain.  The
+    alternative choice is BYTE-ACCURATE: it compares the static wire bytes
+    of the compiled Alt-1 exchange — at its derived capacity and actual
+    packed widths under ``wire`` — against the Alt-2 bitset allgather."""
     decisions = {}
     base = None
     sel = 1.0
@@ -127,24 +133,33 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None) -> dict:
                     f"semijoin alt='local' requires {node.table!r} "
                     f"co-partitioned with {base!r} on the key column"
                 )
+            if local_ok:
+                # co-partitioned keys all route to their LOCAL owner when
+                # forced through the request exchange — no uniform spread
+                # over P destinations, the self-bucket takes everything
+                cap = qstats.capacity_for(
+                    tinfo.num_rows / max(catalog.num_nodes, 1) * sel
+                )
+            else:
+                cap = qstats.request_capacity(
+                    tinfo.num_rows, sel, catalog.num_nodes
+                )
+            wf = qstats.wire_format_for(
+                target.num_rows, catalog.num_nodes, kind=wire
+            )
             if alt == "auto":
                 if local_ok:
                     alt = "local"
                 else:
-                    n = tinfo.num_rows * sel          # surviving requests
-                    choice = choose_semijoin(
-                        max(n, 1.0), target.num_rows, max(gamma, 1e-9),
-                        max(catalog.num_nodes, 1),
+                    choice = choose_semijoin_wire(
+                        cap, target.num_rows, max(catalog.num_nodes, 1),
+                        domain=wf.domain, packed=wf.packed,
                     )
                     alt = "request" if choice == 1 else "bitset"
-            cap = 0
-            if alt == "request":
-                cap = qstats.request_capacity(
-                    tinfo.num_rows, sel, catalog.num_nodes
-                )
             decisions[id(node)] = _SemiJoinPlan(
-                alt=alt, capacity=cap,
+                alt=alt, capacity=cap if alt == "request" else 0,
                 key=f"{query_name or 'query'}_sj{len(decisions)}",
+                wire=wf,
             )
             sel *= gamma
     return decisions
@@ -201,11 +216,17 @@ def _measure_stack(aggs, cols, mask):
     return stacked
 
 
-def lower(query: Query, catalog: Catalog):
+def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
     """Compile ``query`` into ``plan(ctx, tables)`` (see module docstring
-    for the output contract).  Raises :class:`IRValidationError` for
-    malformed IR and :class:`LoweringError` for valid-but-uncompilable
-    queries (min/max aggregates, kernel-ineligible shapes)."""
+    for the output contract).  ``wire`` selects the exchange encoding the
+    §3.2.2 byte-accurate cost model assumes ("packed" bit-packs request
+    keys to catalog-derived widths with the mask folded in; "raw" ships
+    int32 buckets + a separate mask collective); the compiled plan applies
+    the packed format only when the execution context agrees
+    (``PlanContext.wire == "packed"``).  Raises :class:`IRValidationError`
+    for malformed IR and :class:`LoweringError` for
+    valid-but-uncompilable queries (min/max aggregates, kernel-ineligible
+    shapes)."""
     root = query.root
     validate(root, catalog)
     if not isinstance(root, (GroupAgg, TopK)):
@@ -230,7 +251,8 @@ def lower(query: Query, catalog: Catalog):
                 )
             kernel_col, kernel_cutoff = _kernel_filter(root)
 
-    sj_plans = _decide_semijoins(root, catalog, query_name=query.name)
+    sj_plans = _decide_semijoins(root, catalog, query_name=query.name,
+                                 wire=wire)
 
     def _eval(node, ctx, t) -> _Stream:
         if isinstance(node, Scan):
@@ -276,6 +298,8 @@ def lower(query: Query, catalog: Catalog):
                     # carries an explicit override under this plan's key
                     capacity=ctx.cap(plan.key, plan.capacity),
                     axis=ctx.axis, backend=ctx.backend,
+                    wire=(plan.wire if ctx.wire == "packed"
+                          else WireFormat.raw()),
                 )
                 s.and_mask(bits)
                 s.overflow = s.overflow | ovf

@@ -16,6 +16,7 @@ from __future__ import annotations
 import math
 from typing import Mapping
 
+from repro.core.exchange import WireFormat
 from repro.query.ir import (
     Bin,
     BinOp,
@@ -107,3 +108,14 @@ def request_capacity(table_rows: int, selectivity: float, num_nodes: int) -> int
     ships ``rows/P * sel`` keys, spread uniformly over P destinations."""
     n_local = (table_rows / max(num_nodes, 1)) * min(max(selectivity, 0.0), 1.0)
     return capacity_for(n_local / max(num_nodes, 1))
+
+
+def wire_format_for(table_rows: int, num_nodes: int,
+                    kind: str = "packed") -> WireFormat:
+    """Wire format of an exchange addressing the owners of a table
+    range-partitioned over ``num_nodes``: the per-destination key domain is
+    ``rows_per_node`` and its catalog-derived ``required_width`` fixes the
+    packed key width (``repro.core.compression``)."""
+    if kind != "packed":
+        return WireFormat.raw()
+    return WireFormat.packed_for(table_rows, num_nodes)

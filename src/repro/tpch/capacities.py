@@ -10,12 +10,18 @@ uniformly over P destinations, mean ``rows_local * sel / P``, plus a
 6-sigma binomial tail margin.  Run-time overflow flags in the exchange
 layer catch any under-estimate.
 
+Alongside the capacities, :func:`wire_formats` derives each hand-plan
+exchange's PACKED wire format from the same catalog information (target
+table rows → per-destination key domain → ``required_width``), so the hand
+plans ship the compressed §3.2.1 encoding by default exactly like the
+lowered IR does.
+
 Knobs that are NOT exchange buffers (lazy-top-k chunk/round counts, the
 §3.2.5 codec group/candidate sizes) remain explicit algorithm parameters.
 """
 from __future__ import annotations
 
-from repro.query.stats import capacity_for
+from repro.query.stats import capacity_for, wire_format_for
 from repro.tpch import dbgen
 from repro.tpch import schema as S
 from repro.tpch.schema import DEFAULT_PARAMS
@@ -68,4 +74,27 @@ def derive(sf: float, num_nodes: int, params=DEFAULT_PARAMS) -> dict:
         "q3_rounds": 64,       # lax.while_loop bound for the lazy rounds
         "q15_group": 1024,     # §3.2.5 codec group (shrunk to fit per-node)
         "q15_candidates": 256, # §3.2.5 exact-value candidate buffer
+    }
+
+
+# each hand-plan exchange -> the table whose owners it addresses (the wire
+# codec packs keys to that table's per-destination domain width)
+_EXCHANGE_TARGETS = {
+    "q2_request": "supplier",
+    "q2_owner": "supplier",
+    "q3_request": "customer",
+    "q5_request": "customer",
+    "q13_route": "customer",
+    "q14_request": "part",
+    "q21_request": "supplier",
+}
+
+
+def wire_formats(tables, num_nodes: int) -> dict:
+    """Packed §3.2.1 wire format per hand-plan exchange, derived from the
+    ACTUAL loaded tables (``TPCHDriver.tables``) so the per-destination key
+    domains match the execution context's partitionings exactly."""
+    return {
+        name: wire_format_for(int(tables[target].num_rows), num_nodes)
+        for name, target in _EXCHANGE_TARGETS.items()
     }

@@ -48,13 +48,28 @@ class QueryAnswer:
     overflow: bool = False  # a Tier-2 exchange buffer overflowed
 
 
+def _split_overflow(out):
+    """Surface a plan's exchange-overflow flag instead of leaving it buried
+    in the raw result: hand plans return either a dict with an ``overflow``
+    entry or an ``(value, overflow)`` pair (``bucket_by_destination``'s
+    flag, threaded through every request/owner-routed exchange)."""
+    if isinstance(out, dict):
+        return out, bool(np.asarray(out.pop("overflow", False)))
+    if (isinstance(out, tuple) and len(out) == 2
+            and np.ndim(out[1]) == 0
+            and np.asarray(out[1]).dtype == np.bool_):
+        return out[0], bool(np.asarray(out[1]))
+    return out, False
+
+
 class TPCHDriver:
     def __init__(self, sf: float, cluster: Cluster | None = None, seed: int = 0,
-                 capacities=None, backend: str = "xla"):
+                 capacities=None, backend: str = "xla", wire: str = "packed"):
         self.cluster = cluster or Cluster()
         self.sf = sf
         self.seed = seed
         self.backend = backend
+        self.wire = wire
         # §3.2.2-derived capacities for the hand plans; explicit overrides win
         self.capacities = tpch_capacities.derive(sf, self.cluster.num_nodes)
         self.capacities.update(capacities or {})
@@ -65,7 +80,10 @@ class TPCHDriver:
                                      num_nodes=self.cluster.num_nodes)
         self.placed = {n: self.cluster.load(t) for n, t in self.tables.items()}
         self.ctx = self.cluster.context(
-            self.placed, self.capacities, backend=backend, scale_factor=sf
+            self.placed, self.capacities, backend=backend, scale_factor=sf,
+            wire=wire,
+            wires=tpch_capacities.wire_formats(self.tables,
+                                               self.cluster.num_nodes),
         )
         self._compiled = {}       # registry name -> compiled hand plan
         self._compiled_ir = {}    # query name/id -> (query, compiled fn)
@@ -131,7 +149,7 @@ class TPCHDriver:
         if hit is not None and (hit[0] is q or same_query(hit[0], q)):
             self._compiled_ir[key] = self._compiled_ir.pop(key)  # LRU touch
             return hit[1]
-        plan = lower(q, self.catalog)
+        plan = lower(q, self.catalog, wire=self.wire)
         fn = self.cluster.compile(plan, self.ctx, self.placed)
         self._compiled_ir[key] = (q, fn)
         while len(self._compiled_ir) > self.IR_CACHE_MAX:
@@ -166,8 +184,8 @@ class TPCHDriver:
         if isinstance(q, str):
             entry = plan_registry.get(q)
             if entry.ir is None:
-                return QueryAnswer(jax.device_get(self.run(q)), tier=2,
-                                   source=q)
+                value, overflow = _split_overflow(jax.device_get(self.run(q)))
+                return QueryAnswer(value, tier=2, source=q, overflow=overflow)
             q = entry.ir
         if not isinstance(q, Query):
             raise TypeError(

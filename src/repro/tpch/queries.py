@@ -127,6 +127,50 @@ def q14_promo_ir(p=DP, alt: str = "auto") -> Query:
     )
 
 
+def q4_sj_ir(p=DP, alt: str = "request") -> Query:
+    """Q4 forced through the §3.2.2 exchange: instead of the co-partitioned
+    EXISTS probe, every lineitem semi-joins its ORDER's date window
+    remotely, then the late filter + a per-order count reproduce the exact
+    Q4 result (count of window orders with >= 1 late lineitem, by
+    priority).  The request keys span the ORDERS key domain — this is the
+    wire-format benchmark's q4 exchange."""
+    return (
+        Q.scan("lineitem")
+        .semijoin("orders", key=C("l_orderkey"),
+                  pred=(C("o_orderdate") >= p.q4_date_min)
+                       & (C("o_orderdate") < p.q4_date_max),
+                  alt=alt)
+        .filter(C("l_commitdate") < C("l_receiptdate"))
+        .group_by_key(C("l_orderkey"), into="orders",
+                      aggs=[("late_cnt", "count")])
+        .filter(C("late_cnt") > 0)
+        .group_agg(
+            keys=[("orderpriority", C("o_orderpriority"), len(S.PRIORITIES))],
+            aggs=[("order_count", "count")],
+        )
+        .named(f"q4_sj_{alt}")
+    )
+
+
+def q18_sj_ir(p=DP, alt: str = "request", qty: float = 250.0,
+              segment: int = DP.q3_segment) -> Query:
+    """Q18 shape with a remote CUSTOMER filter via the §3.2.2 semi-join:
+    large-volume orders keep only customers of one market segment.  The
+    request keys span the (small) CUSTOMER key domain — the wire-format
+    benchmark's q18 exchange."""
+    return (
+        Q.scan("lineitem")
+        .group_by_key(C("l_orderkey"), into="orders",
+                      aggs=[("sum_qty", "sum", C("l_quantity"))])
+        .filter(C("sum_qty") > qty)
+        .semijoin("customer", key=C("o_custkey"),
+                  pred=C("c_mktsegment") == segment, alt=alt)
+        .group_agg(aggs=[("sum_qty_total", "sum", C("sum_qty")),
+                         ("order_count", "count")])
+        .named(f"q18_sj_{alt}")
+    )
+
+
 IR_QUERIES = {
     "q1": q1_ir(),
     "q1_kernel": q1_ir(method="kernel"),
