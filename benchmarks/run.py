@@ -14,6 +14,7 @@
 | cube tier-1 speedup     | (ours)    | benchmarks.cube_speedup     |
 | lowered-IR overhead     | (ours)    | benchmarks.ir_overhead      |
 | exchange wire formats   | §3.2.1    | benchmarks.exchange_compression |
+| prepared-plan throughput| §2, §3.1  | benchmarks.param_throughput |
 
 Every section persists machine-readable JSON under ``experiments/bench/``
 (via ``benchmarks.common.emit``) alongside the printed markdown table.
@@ -40,8 +41,9 @@ def main(argv=None):
 
     from benchmarks import (compiled_speedup, cube_speedup,
                             exchange_compression, ir_overhead,
-                            power_test, q15_topk, roofline_report,
-                            sampling_bench, semijoin_cost, weak_scaling)
+                            param_throughput, power_test, q15_topk,
+                            roofline_report, sampling_bench, semijoin_cost,
+                            weak_scaling)
 
     sections = {
         "cube_speedup": lambda: cube_speedup.run(
@@ -52,6 +54,8 @@ def main(argv=None):
         "exchange_compression": lambda: exchange_compression.run(
             sf=0.02 if args.quick else 0.05,
             repeat=5 if args.quick else 30),
+        "param_throughput": lambda: param_throughput.run(
+            sf=0.02, repeat=3 if args.quick else 8),
         "weak_scaling": lambda: weak_scaling.run(repeat=2 if args.quick else 3),
         "q15_topk": lambda: (q15_topk.run(sf=0.01 if args.quick else 0.02),
                              q15_topk.sweep_m(sf=0.01 if args.quick else 0.02)),

@@ -56,6 +56,26 @@ def main():
         keys = np.asarray(topk.keys if hasattr(topk, "keys") else topk[1])[:3]
         print(f"  {v:8s} top orders {keys.tolist()}  "
               f"({(time.monotonic()-t0)*1e3:.0f} ms incl. host)")
+
+    # Prepared statements (paper §2/§3.1): ONE compiled plan, any literals
+    from repro.tpch.queries import q6_param_ir, random_binding
+
+    prep = driver.prepare(q6_param_ir())
+    rng = np.random.default_rng(0)
+    bindings = [random_binding("q6", rng) for _ in range(8)]
+    t0 = time.monotonic()
+    revenues = [float(np.asarray(prep.execute(b).value).reshape(()))
+                for b in bindings]
+    t_seq = time.monotonic() - t0
+    t0 = time.monotonic()
+    batched = prep.execute_batch(bindings)  # 8 queries, one vmapped dispatch
+    t_batch = time.monotonic() - t0
+    assert np.allclose(np.asarray(batched.value).reshape(-1), revenues,
+                       rtol=1e-5)
+    print(f"\nQ6 prepared: 8 random TPC-H bindings, 1 compile "
+          f"({t_seq*1e3:.0f} ms sequential, {t_batch*1e3:.0f} ms batched)")
+    print(f"  revenues {np.round(revenues[:4], 0).tolist()} ...")
+
     print("\nall results oracle-checked ✓")
 
 

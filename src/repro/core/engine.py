@@ -90,15 +90,47 @@ class Cluster:
         )
 
     # -- compilation -------------------------------------------------------
-    def compile(self, plan: Callable, ctx: PlanContext, tables: Mapping[str, Table]):
+    def compile(self, plan: Callable, ctx: PlanContext, tables: Mapping[str, Table],
+                *, batch: bool = False):
         """Bind a plan to this mesh: returns a jitted function of the sharded
         column pytree.  Partitioned tables are P('nodes') on axis 0;
-        replicated tables (and all outputs) are replicated."""
+        replicated tables (and all outputs) are replicated.
+
+        A PARAMETERIZED plan (``plan.params`` non-empty, the lowered form of
+        a query with :class:`~repro.query.ir.Param` placeholders) compiles
+        to ``fn(columns, params)`` where ``params`` maps each name to a
+        replicated scalar — the paper's compile-once/execute-many model:
+        the values are traced jit arguments, so ONE executable serves every
+        binding.  With ``batch=True`` the params are instead stacked along
+        a leading batch axis and the plan body is ``vmap``-ed over it
+        INSIDE shard_map — N query instances of the same prepared shape run
+        as one SPMD dispatch (collectives batch along the lane axis), and
+        every output gains a leading lane axis."""
 
         in_specs = {
             name: {col: (P() if t.replicated else P(self.axis)) for col in t.columns}
             for name, t in tables.items()
         }
+        params = tuple(getattr(plan, "params", ()) or ())
+        if batch and not params:
+            raise ValueError("batch=True requires a parameterized plan")
+
+        if params:
+            param_specs = {p.name: P() for p in params}
+
+            def run(columns, pvals):
+                if batch:
+                    return jax.vmap(lambda pv: plan(ctx, columns, pv))(pvals)
+                return plan(ctx, columns, pvals)
+
+            sharded = jax.shard_map(
+                run,
+                mesh=self.mesh,
+                in_specs=(in_specs, param_specs),
+                out_specs=P(),
+                check_vma=False,
+            )
+            return jax.jit(sharded)
 
         def run(columns):
             return plan(ctx, columns)

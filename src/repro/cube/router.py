@@ -17,6 +17,15 @@ edges[j]]``, so a range predicate is answerable iff its bound lands on an
 edge (``<= v`` with ``v`` an edge; ``> v`` likewise; integer domains also
 get ``< v`` / ``>= v`` via the ``v - 1`` edge).  Anything else is routed to
 Tier 2 rather than answered approximately.
+
+PARAMETERIZED predicates (``col op Param``, the prepared-statement form)
+split that decision across time: at prepare/route time only the SHAPE is
+checked (the filtered column must be a dimension of a covering rollup —
+value exactness cannot be known yet), and at execute time
+:meth:`CubeRouter.answer_bound` substitutes the binding and applies the
+edge-exactness rule per call — an in-range binding on an edge serves Tier
+1, anything else returns None and the caller falls back to the prepared
+Tier-2 plan.
 """
 from __future__ import annotations
 
@@ -34,11 +43,17 @@ from repro.query import ir as qir
 class Filter:
     """Predicate on one cube dimension.  For categorical dims ``value`` is a
     dictionary code (or tuple of codes for op "in"); for binned dims it is a
-    raw column value tested against the bin edges."""
+    raw column value tested against the bin edges.  A
+    :class:`~repro.query.ir.Param` value is a placeholder resolved at
+    execute time (:meth:`CubeRouter.answer_bound`)."""
 
     dim: str
     op: str  # ==, in, <=, <, >=, >
     value: object
+
+    @property
+    def parameterized(self) -> bool:
+        return isinstance(self.value, qir.Param)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,7 +276,10 @@ class CubeRouter:
         needed = set(q.group_by) | {f.dim for f in q.filters}
         if not needed <= set(spec.dim_names):
             return None
-        if any(_filter_mask(spec.dim(f.dim), f) is None for f in q.filters):
+        # value exactness of parameterized filters is unknowable until a
+        # binding arrives — answer_bound() re-checks it per execution
+        if any(_filter_mask(spec.dim(f.dim), f) is None
+               for f in q.filters if not f.parameterized):
             return None
         for rollup in spec.covering_rollups(needed):
             ordered = tuple(n for n in spec.dim_names if n in rollup)
@@ -294,10 +312,40 @@ class CubeRouter:
         return best
 
     # -- answering ----------------------------------------------------------
+    def answer_bound(self, match: Match, binding=None):
+        """Execute-time Tier-1 answer for a (possibly parameterized) match:
+        substitute ``binding`` into the parameterized filters, THEN apply
+        the bin-edge exactness rule per filter.  Returns the dense result,
+        or None when any bound value is not exactly expressible on its
+        dimension (off-edge or out-of-range binding) — the caller falls
+        back to the prepared Tier-2 plan."""
+        q, spec = match.query, match.route.cube.spec
+        resolved = []
+        for f in q.filters:
+            if f.parameterized:
+                if binding is None or f.value.name not in binding:
+                    raise qir.UnboundParamError(
+                        f"cube filter on {f.dim!r} needs a binding for "
+                        f"parameter {f.value.name!r}"
+                    )
+                v = binding[f.value.name]
+                f = dataclasses.replace(
+                    f, value=v.item() if hasattr(v, "item") else v)
+            resolved.append(f)
+        if any(_filter_mask(spec.dim(f.dim), f) is None for f in resolved):
+            return None
+        return self.answer(dataclasses.replace(q, filters=tuple(resolved)),
+                           match.route)
+
     def answer(self, q: AggQuery, route: Optional[Route] = None):
         """Dense result of shape ``(*group_by cardinalities, len(measures))``
         (float64), or None when no cube covers the query.  Empty min/max
         cells come back NaN."""
+        if any(f.parameterized for f in q.filters):
+            raise qir.UnboundParamError(
+                "answer() needs concrete filter values — resolve "
+                "parameterized filters via answer_bound(match, binding)"
+            )
         route = route or self.route(q)
         if route is None:
             return None

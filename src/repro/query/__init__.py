@@ -27,6 +27,7 @@ from repro.query.ir import (  # noqa: F401
     IRValidationError,
     Lit,
     LoweringError,
+    Param,
     Project,
     Q,
     Query,
@@ -35,12 +36,15 @@ from repro.query.ir import (  # noqa: F401
     SemiJoin,
     TopK,
     UnaryOp,
+    UnboundParamError,
     UncoveredQueryError,
     UnknownPlanError,
     build_catalog,
     conjuncts,
     eval_expr,
     expr_columns,
+    expr_params,
+    query_params,
     same_expr,
     same_node,
     same_query,
@@ -48,3 +52,4 @@ from repro.query.ir import (  # noqa: F401
     validate,
 )
 from repro.query.lower import lower  # noqa: F401
+from repro.query.params import bind_params, parameterize  # noqa: F401

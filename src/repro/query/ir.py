@@ -58,6 +58,11 @@ class UncoveredQueryError(QueryError, LookupError):
     form — nothing can answer it."""
 
 
+class UnboundParamError(QueryError, LookupError):
+    """A :class:`Param` placeholder was evaluated without a binding for
+    its name (execute a prepared query with the missing parameter)."""
+
+
 # ---------------------------------------------------------------------------
 # expressions
 # ---------------------------------------------------------------------------
@@ -142,6 +147,26 @@ class Lit(Expr):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class Param(Expr):
+    """Runtime query parameter (the paper's §2/§3.1 compile-once model):
+    a scalar placeholder bound at execute time, traced as a jit argument
+    by the lowering so ONE compiled plan serves every literal binding.
+
+    ``lo``/``hi`` optionally declare the binding range; the selectivity
+    model sizes exchange buffer capacities for the WORST binding in the
+    declared range (no range -> fully conservative).  The range is a
+    sizing hint, not a runtime check."""
+
+    name: str
+    dtype: str = "float32"  # numpy dtype name of the bound scalar
+    lo: Optional[float] = None
+    hi: Optional[float] = None
+
+    def __post_init__(self):
+        np.dtype(self.dtype)  # typo-proof: fail at build, not at bind
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class BinOp(Expr):
     op: str  # + - * / == != < <= > >= and or
     lhs: Expr
@@ -191,22 +216,32 @@ _BINOPS = {
 }
 
 
-def eval_expr(e: Expr, cols: Mapping[str, object]):
+def eval_expr(e: Expr, cols: Mapping[str, object], params=None):
     """Evaluate an expression against a column dict (jnp inside a plan, np
-    on the host — both work: only python operators and searchsorted)."""
+    on the host — both work: only python operators and searchsorted).
+    ``params`` binds :class:`Param` placeholders by name (traced scalars
+    inside a prepared plan, python/np scalars on the host)."""
     if isinstance(e, Col):
         return cols[e.name]
     if isinstance(e, Lit):
         return e.value
+    if isinstance(e, Param):
+        if params is None or e.name not in params:
+            raise UnboundParamError(
+                f"parameter {e.name!r} has no binding — pass it via "
+                f"params= (bound: {sorted(params) if params else 'none'})"
+            )
+        return params[e.name]
     if isinstance(e, BinOp):
-        return _BINOPS[e.op](eval_expr(e.lhs, cols), eval_expr(e.rhs, cols))
+        return _BINOPS[e.op](eval_expr(e.lhs, cols, params),
+                             eval_expr(e.rhs, cols, params))
     if isinstance(e, UnaryOp):
-        v = eval_expr(e.operand, cols)
+        v = eval_expr(e.operand, cols, params)
         return ~v if e.op == "not" else -v
     if isinstance(e, Bin):
         import jax.numpy as jnp
 
-        col = eval_expr(e.child, cols)
+        col = eval_expr(e.child, cols, params)
         edges = jnp.asarray(np.asarray(e.edges), col.dtype)
         return jnp.searchsorted(edges, col, side="left").astype(jnp.int32)
     raise IRValidationError(f"unknown expression node {type(e).__name__}")
@@ -216,7 +251,7 @@ def expr_columns(e: Expr) -> frozenset:
     """Set of column names an expression reads."""
     if isinstance(e, Col):
         return frozenset((e.name,))
-    if isinstance(e, Lit):
+    if isinstance(e, (Lit, Param)):
         return frozenset()
     if isinstance(e, BinOp):
         return expr_columns(e.lhs) | expr_columns(e.rhs)
@@ -225,6 +260,38 @@ def expr_columns(e: Expr) -> frozenset:
     if isinstance(e, Bin):
         return expr_columns(e.child)
     raise IRValidationError(f"unknown expression node {type(e).__name__}")
+
+
+def expr_params(e: Optional[Expr]) -> tuple:
+    """Params an expression binds, in deterministic pre-order (duplicates
+    by name kept once, first occurrence wins)."""
+    if e is None or isinstance(e, (Col, Lit)):
+        return ()
+    if isinstance(e, Param):
+        return (e,)
+    if isinstance(e, BinOp):
+        return _dedup_params(expr_params(e.lhs) + expr_params(e.rhs))
+    if isinstance(e, UnaryOp):
+        return expr_params(e.operand)
+    if isinstance(e, Bin):
+        return expr_params(e.child)
+    raise IRValidationError(f"unknown expression node {type(e).__name__}")
+
+
+def _dedup_params(ps: tuple) -> tuple:
+    out, seen = [], {}
+    for p in ps:
+        prev = seen.get(p.name)
+        if prev is None:
+            seen[p.name] = p
+            out.append(p)
+        elif not same_expr(prev, p):
+            raise IRValidationError(
+                f"parameter {p.name!r} declared twice with different "
+                f"dtype/range ({prev.dtype}/[{prev.lo},{prev.hi}] vs "
+                f"{p.dtype}/[{p.lo},{p.hi}])"
+            )
+    return tuple(out)
 
 
 def same_expr(a: Optional[Expr], b: Optional[Expr]) -> bool:
@@ -237,6 +304,9 @@ def same_expr(a: Optional[Expr], b: Optional[Expr]) -> bool:
         return a.name == b.name
     if isinstance(a, Lit):
         return a.value == b.value
+    if isinstance(a, Param):
+        return (a.name == b.name and a.dtype == b.dtype
+                and a.lo == b.lo and a.hi == b.hi)
     if isinstance(a, BinOp):
         return a.op == b.op and same_expr(a.lhs, b.lhs) and same_expr(a.rhs, b.rhs)
     if isinstance(a, UnaryOp):
@@ -251,16 +321,22 @@ _FLIP_CMP = {"<": ">", "<=": ">=", ">": "<", ">=": "<=",
 
 
 def normalize_comparison(e: Expr) -> Optional[tuple]:
-    """``Col op Lit`` (either side) -> (column, op, value), with the
-    operator flipped when the literal is on the left; None for anything
-    else.  The single normalizer shared by the selectivity model and the
-    cube router's predicate derivation."""
+    """``Col op Lit`` / ``Col op Param`` (either side) -> (column, op,
+    value), with the operator flipped when the scalar is on the left; None
+    for anything else.  For a literal ``value`` is the raw python value;
+    for a parameter it is the :class:`Param` node itself (consumers decide
+    how to bind it).  The single normalizer shared by the selectivity
+    model and the cube router's predicate derivation."""
     if not isinstance(e, BinOp) or e.op not in _FLIP_CMP:
         return None
-    if isinstance(e.lhs, Col) and isinstance(e.rhs, Lit):
-        return e.lhs.name, e.op, e.rhs.value
-    if isinstance(e.lhs, Lit) and isinstance(e.rhs, Col):
-        return e.rhs.name, _FLIP_CMP[e.op], e.lhs.value
+
+    def _scalar(x):
+        return x.value if isinstance(x, Lit) else x
+
+    if isinstance(e.lhs, Col) and isinstance(e.rhs, (Lit, Param)):
+        return e.lhs.name, e.op, _scalar(e.rhs)
+    if isinstance(e.lhs, (Lit, Param)) and isinstance(e.rhs, Col):
+        return e.rhs.name, _FLIP_CMP[e.op], _scalar(e.lhs)
     return None
 
 
@@ -321,6 +397,40 @@ def conjuncts(e: Expr) -> list:
     if isinstance(e, BinOp) and e.op == "and":
         return conjuncts(e.lhs) + conjuncts(e.rhs)
     return [e]
+
+
+def query_params(node) -> tuple:
+    """All :class:`Param` placeholders an operator tree (or ``Query``)
+    binds, deduplicated by name, in deterministic scan-first order — the
+    ordered parameter signature of a prepared plan.  Raises
+    :class:`IRValidationError` when one name is declared with conflicting
+    dtype/range."""
+    if isinstance(node, Query):
+        node = node.root
+    if isinstance(node, Scan):
+        return ()
+    ps = query_params(node.child)
+    if isinstance(node, Filter):
+        ps += expr_params(node.pred)
+    elif isinstance(node, Project):
+        for _, e in node.cols:
+            ps += expr_params(e)
+    elif isinstance(node, SemiJoin):
+        ps += expr_params(node.key) + expr_params(node.pred)
+    elif isinstance(node, Exists):
+        ps += expr_params(node.pred)
+    elif isinstance(node, GroupAgg):
+        for k in node.keys:
+            ps += expr_params(k.expr)
+        for a in node.aggs:
+            ps += expr_params(a.expr)
+    elif isinstance(node, GroupAggByKey):
+        ps += expr_params(node.key)
+        for a in node.aggs:
+            ps += expr_params(a.expr)
+    elif isinstance(node, TopK):
+        ps += expr_params(node.value) + expr_params(node.pred)
+    return _dedup_params(ps)
 
 
 def substitute(e: Expr, env: Mapping[str, Expr]) -> Expr:

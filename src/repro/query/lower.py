@@ -63,8 +63,11 @@ from repro.query.ir import (
     Scan,
     SemiJoin,
     TopK,
+    UnaryOp,
     eval_expr,
     expr_columns,
+    expr_params,
+    query_params,
     validate,
 )
 
@@ -97,12 +100,15 @@ class _SemiJoinPlan:
 
 
 def _decide_semijoins(root, catalog: Catalog, query_name=None,
-                      wire: str = "packed") -> dict:
+                      wire: str = "packed", binding=None) -> dict:
     """Choose each SemiJoin's physical alternative and buffer capacity from
     the §3.2.2 model, using selectivities accumulated along the chain.  The
     alternative choice is BYTE-ACCURATE: it compares the static wire bytes
     of the compiled Alt-1 exchange — at its derived capacity and actual
-    packed widths under ``wire`` — against the Alt-2 bitset allgather."""
+    packed widths under ``wire`` — against the Alt-2 bitset allgather.
+    ``binding`` resolves parameterized predicates for the estimates; an
+    unbound param is sized for the worst binding in its declared range
+    (see ``repro.query.stats``)."""
     decisions = {}
     base = None
     sel = 1.0
@@ -113,7 +119,7 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None,
             continue
         tinfo = catalog.table(base)
         if isinstance(node, Filter):
-            sel *= qstats.estimate_selectivity(node.pred, tinfo.stats)
+            sel *= qstats.estimate_selectivity(node.pred, tinfo.stats, binding)
         elif isinstance(node, Exists):
             sel *= qstats.DEFAULT_SELECTIVITY
         elif isinstance(node, GroupAggByKey):
@@ -121,7 +127,8 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None,
             sel = 1.0
         elif isinstance(node, SemiJoin):
             target = catalog.table(node.table)
-            gamma = qstats.estimate_selectivity(node.pred, target.stats)
+            gamma = qstats.estimate_selectivity(node.pred, target.stats,
+                                                binding)
             edge = catalog.copartitioned.get(base)
             local_ok = (
                 edge is not None and edge[0] == node.table
@@ -165,6 +172,37 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None,
     return decisions
 
 
+def _has_division(e) -> bool:
+    """Whether an expression can turn finite inputs non-finite (division).
+    Used to gate the batched mask-GEMM: it folds the lane mask in AFTER
+    aggregation inputs are built, and 0 * inf = NaN would poison a group
+    sum that the pre-masked scalar path computes correctly."""
+    if isinstance(e, BinOp):
+        return e.op == "/" or _has_division(e.lhs) or _has_division(e.rhs)
+    if isinstance(e, UnaryOp):
+        return _has_division(e.operand)
+    if isinstance(e, Bin):
+        return _has_division(e.child)
+    return False
+
+
+def _maskgemm_eligible(root: GroupAgg, num_groups: int) -> bool:
+    """The batched ``mask @ (onehot (x) measures)`` GEMM requires the
+    expanded tensor to be parameter-independent (else vmap batches it B
+    times), bounded (onehot-sized group spaces only), and NaN-safe (no
+    division anywhere feeding group codes or measures — the lane mask is
+    folded in multiplicatively, after evaluation)."""
+    if not 1 < num_groups <= ONEHOT_MAX_GROUPS:
+        return False
+    exprs = [k.expr for k in root.keys]
+    exprs += [a.expr for a in root.aggs if a.expr is not None]
+    # projections below the root may feed group keys / measures
+    for node in _chain(root)[:-1]:
+        if isinstance(node, Project):
+            exprs += [e for _, e in node.cols]
+    return not any(expr_params(e) or _has_division(e) for e in exprs)
+
+
 def _kernel_filter(root: GroupAgg) -> tuple:
     """The fused Pallas kernel consumes its filter directly: the chain must
     be Scan -> Filter(Col <= Lit int) -> GroupAgg.  Returns (col, cutoff)."""
@@ -201,14 +239,14 @@ def _local_index(ctx, table, keys):
     return keys - ctx.part(table).my_base(ctx.axis)
 
 
-def _measure_stack(aggs, cols, mask):
+def _measure_stack(aggs, cols, mask, pv=None):
     n = next(iter(cols.values())).shape[0]
     outs = []
     for a in aggs:
         if a.agg == "count":
             v = jnp.ones(n, jnp.float32)
         else:
-            v = eval_expr(a.expr, cols).astype(jnp.float32)
+            v = eval_expr(a.expr, cols, pv).astype(jnp.float32)
         outs.append(v)
     stacked = jnp.stack(outs, axis=1)
     if mask is not None:
@@ -216,19 +254,46 @@ def _measure_stack(aggs, cols, mask):
     return stacked
 
 
-def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
+def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
+          binding=None, batched: bool = False):
     """Compile ``query`` into ``plan(ctx, tables)`` (see module docstring
     for the output contract).  ``wire`` selects the exchange encoding the
     §3.2.2 byte-accurate cost model assumes ("packed" bit-packs request
     keys to catalog-derived widths with the mask folded in; "raw" ships
     int32 buckets + a separate mask collective); the compiled plan applies
     the packed format only when the execution context agrees
-    (``PlanContext.wire == "packed"``).  Raises :class:`IRValidationError`
-    for malformed IR and :class:`LoweringError` for
-    valid-but-uncompilable queries (min/max aggregates, kernel-ineligible
-    shapes)."""
+    (``PlanContext.wire == "packed"``).
+
+    A query containing :class:`~repro.query.ir.Param` placeholders lowers
+    to ``plan(ctx, tables, params)`` — the params become TRACED jit
+    arguments (dict name -> scalar), so one compiled executable serves
+    every binding; the ordered parameter signature is exposed as
+    ``plan.params`` and ``Cluster.compile`` threads the extra argument
+    through ``shard_map``.  ``binding`` only feeds the STATIC capacity /
+    alternative decisions (never the traced values): pass the prepare-time
+    defaults of an auto-parameterized literal query to size its buffers
+    exactly as the literal plan would; without it, parameterized
+    predicates are sized for the worst binding in their declared range.
+
+    ``batched=True`` tunes the physical choices for a plan that will be
+    ``vmap``-ed over a stacked parameter axis (``Cluster.compile(...,
+    batch=True)``): a ``method="auto"`` GroupAgg factors its masked
+    contraction as ``mask @ (onehot (x) measures)`` — group codes and
+    measures are parameter-independent, so vmap keeps the ``n x (G*M)``
+    expanded tensor UNBATCHED and B lanes cost ONE ``(B,n) x (n,G*M)``
+    GEMM over the lane masks instead of B independently masked pipelines
+    (or B scatter passes — XLA has no fast batched segment-sum).
+    Explicit methods are honored either way, and shapes the GEMM cannot
+    serve soundly (params or division feeding the keys/measures,
+    beyond-onehot group spaces) fall back to the plain per-lane
+    lowering.
+
+    Raises :class:`IRValidationError` for malformed IR and
+    :class:`LoweringError` for valid-but-uncompilable queries (min/max
+    aggregates, kernel-ineligible shapes)."""
     root = query.root
     validate(root, catalog)
+    params = query_params(root)
     if not isinstance(root, (GroupAgg, TopK)):
         raise LoweringError(
             f"query root must be group_agg or top_k to produce a result set "
@@ -252,43 +317,43 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
             kernel_col, kernel_cutoff = _kernel_filter(root)
 
     sj_plans = _decide_semijoins(root, catalog, query_name=query.name,
-                                 wire=wire)
+                                 wire=wire, binding=binding)
 
-    def _eval(node, ctx, t) -> _Stream:
+    def _eval(node, ctx, t, pv) -> _Stream:
         if isinstance(node, Scan):
             return _Stream(base=node.table, cols=dict(t[node.table]),
                            mask=None, overflow=False)
 
-        s = _eval(node.child, ctx, t)
+        s = _eval(node.child, ctx, t, pv)
 
         if isinstance(node, Filter):
-            s.and_mask(eval_expr(node.pred, s.cols))
+            s.and_mask(eval_expr(node.pred, s.cols, pv))
             return s
 
         if isinstance(node, Project):
             for name, e in node.cols:
-                s.cols[name] = eval_expr(e, s.cols)
+                s.cols[name] = eval_expr(e, s.cols, pv)
             return s
 
         if isinstance(node, SemiJoin):
             plan = sj_plans[id(node)]
             target_cols = t[node.table]
             part = ctx.part(node.table)
-            key = eval_expr(node.key, s.cols)
+            key = eval_expr(node.key, s.cols, pv)
             if plan.alt == "local":
-                bits_owner = eval_expr(node.pred, target_cols)
+                bits_owner = eval_expr(node.pred, target_cols, pv)
                 s.and_mask(bits_owner[_local_index(ctx, node.table, key)])
             elif plan.alt == "bitset":
-                local_bits = eval_expr(node.pred, target_cols)
+                local_bits = eval_expr(node.pred, target_cols, pv)
                 words = semijoin.alt2_bitset(local_bits, axis=ctx.axis)
                 s.and_mask(semijoin.probe(words, key, part))
             else:  # request (Alt-1 index-lookup exchange)
                 needed = expr_columns(node.pred)
 
                 def pred_fn(local_idx, m, _cols=target_cols, _p=node.pred,
-                            _need=needed):
+                            _need=needed, _pv=pv):
                     view = {c: _cols[c][local_idx] for c in _need}
-                    return eval_expr(_p, view) & m
+                    return eval_expr(_p, view, _pv) & m
 
                 mask = (s.mask if s.mask is not None
                         else jnp.ones(key.shape[0], bool))
@@ -307,7 +372,7 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
 
         if isinstance(node, Exists):
             inner = t[node.table]
-            bits = eval_expr(node.pred, inner)
+            bits = eval_expr(node.pred, inner, pv)
             rows = ctx.part(s.base).rows_per_node
             fk_local = _local_index(ctx, s.base, inner[node.key])
             has = jnp.zeros(rows, bool).at[fk_local].max(bits)
@@ -315,7 +380,7 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
             return s
 
         if isinstance(node, GroupAggByKey):
-            key = eval_expr(node.key, s.cols)
+            key = eval_expr(node.key, s.cols, pv)
             parent_part = ctx.part(node.into)
             rows = parent_part.rows_per_node
             idx = _local_index(ctx, node.into, key)
@@ -324,7 +389,7 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
                 if a.agg == "count":
                     v = jnp.ones(key.shape[0], jnp.float32)
                 else:
-                    v = eval_expr(a.expr, s.cols).astype(jnp.float32)
+                    v = eval_expr(a.expr, s.cols, pv).astype(jnp.float32)
                 if s.mask is not None:
                     v = jnp.where(s.mask, v, 0.0)
                 derived[a.name] = jnp.zeros(rows, jnp.float32).at[idx].add(v)
@@ -337,23 +402,25 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
 
         raise LoweringError(f"cannot lower operator {type(node).__name__}")
 
-    def plan(ctx, t):
+    def _run(ctx, t, pv):
         if isinstance(root, GroupAgg):
             if root.method == "kernel":
                 from repro.kernels import ops
 
-                s = _eval(root.child, ctx, t)
-                gid = _group_ids(root, s, clip=True)  # kernel indexes by gid
-                stacked = _measure_stack(root.aggs, s.cols, mask=None)
+                s = _eval(root.child, ctx, t, pv)
+                gid = _group_ids(root, s, pv, clip=True)  # kernel indexes by gid
+                stacked = _measure_stack(root.aggs, s.cols, mask=None, pv=pv)
                 local = ops.filtered_group_sum(
                     stacked, gid, s.cols[kernel_col],
                     cutoff=kernel_cutoff, num_groups=num_groups,
                 )
             else:
-                s = _eval(root.child, ctx, t)
+                s = _eval(root.child, ctx, t, pv)
                 method = root.method
                 if method == "auto":
                     method = "onehot" if num_groups <= ONEHOT_MAX_GROUPS else "dense"
+                    if batched and _maskgemm_eligible(root, num_groups):
+                        method = "maskgemm"
                 if num_groups == 1:
                     # global aggregate: per-measure masked tree-sums (the
                     # hand-plan shape), no one-hot detour
@@ -361,21 +428,40 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
                     outs = []
                     for a in root.aggs:
                         v = (jnp.ones(n, jnp.float32) if a.agg == "count"
-                             else eval_expr(a.expr, s.cols).astype(jnp.float32))
+                             else eval_expr(a.expr, s.cols, pv).astype(jnp.float32))
                         if s.mask is not None:
                             v = jnp.where(s.mask, v, 0.0)
                         outs.append(jnp.sum(v))
                     local = jnp.stack(outs)[None, :]
+                elif method == "maskgemm":
+                    # batched-lowering form: group codes and measures are
+                    # parameter-independent, only the filter mask varies
+                    # per lane — contract the lane mask against the
+                    # pre-expanded (n, G*M) one-hot (x) measure tensor so
+                    # vmap batches a single GEMM, not the whole pipeline.
+                    # Out-of-range codes match no one-hot column and drop
+                    # out, like the onehot path.
+                    gid = _group_ids(root, s, pv, clip=False)
+                    stacked = _measure_stack(root.aggs, s.cols, None, pv)
+                    n, m = stacked.shape
+                    onehot = (gid[:, None]
+                              == jnp.arange(num_groups, dtype=jnp.int32)
+                              ).astype(jnp.float32)
+                    expanded = (onehot[:, :, None] * stacked[:, None, :]
+                                ).reshape(n, num_groups * m)
+                    maskf = (jnp.ones(n, jnp.float32) if s.mask is None
+                             else s.mask.astype(jnp.float32))
+                    local = (maskf @ expanded).reshape(num_groups, m)
                 elif method == "onehot":
                     # out-of-range codes match no one-hot row and drop out,
                     # so no clamp pass is needed (keeps the HLO identical
                     # to the hand-written plans)
-                    gid = _group_ids(root, s, clip=False)
-                    stacked = _measure_stack(root.aggs, s.cols, s.mask)
+                    gid = _group_ids(root, s, pv, clip=False)
+                    stacked = _measure_stack(root.aggs, s.cols, s.mask, pv)
                     local = aggregation.group_sum_onehot(stacked, gid, num_groups)
                 else:
-                    gid = _group_ids(root, s, clip=True)  # scatter safety
-                    stacked = _measure_stack(root.aggs, s.cols, s.mask)
+                    gid = _group_ids(root, s, pv, clip=True)  # scatter safety
+                    stacked = _measure_stack(root.aggs, s.cols, s.mask, pv)
                     local = jnp.stack(
                         [aggregation.group_sum_dense(stacked[:, c], gid, num_groups)
                          for c in range(stacked.shape[1])],
@@ -387,10 +473,10 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
             return out
 
         # TopK root
-        s = _eval(root.child, ctx, t)
+        s = _eval(root.child, ctx, t, pv)
         if root.pred is not None:
-            s.and_mask(eval_expr(root.pred, s.cols))
-        values = eval_expr(root.value, s.cols)
+            s.and_mask(eval_expr(root.pred, s.cols, pv))
+        values = eval_expr(root.value, s.cols, pv)
         keys = ctx.part(s.base).global_keys(ctx.axis)
         local = topk.local_topk(values, keys, root.k, s.mask)
         winners = topk.topk_allreduce(local, ctx.axis)
@@ -415,16 +501,23 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed"):
             out["overflow"] = s.overflow
         return out
 
-    def _group_ids(node: GroupAgg, s: _Stream, *, clip: bool):
+    def _group_ids(node: GroupAgg, s: _Stream, pv, *, clip: bool):
         n = next(iter(s.cols.values())).shape[0]
         if not node.keys:
             return jnp.zeros(n, jnp.int32)
         gid = None
         for k in node.keys:
-            code = eval_expr(k.expr, s.cols).astype(jnp.int32)
+            code = eval_expr(k.expr, s.cols, pv).astype(jnp.int32)
             if clip:
                 code = jnp.clip(code, 0, k.cardinality - 1)
             gid = code if gid is None else gid * k.cardinality + code
         return gid
 
+    if params:
+        def plan(ctx, t, pvals):
+            return _run(ctx, t, pvals)
+    else:
+        def plan(ctx, t):
+            return _run(ctx, t, None)
+    plan.params = params
     return plan

@@ -24,6 +24,7 @@ from repro.query.ir import (
     ColumnStats,
     Expr,
     Lit,
+    Param,
     UnaryOp,
     normalize_comparison,
 )
@@ -66,39 +67,58 @@ def _range_fraction(st: ColumnStats, op: str, v: float) -> float:
     return min(1.0, max(0.0, frac))
 
 
-def estimate_selectivity(pred: Expr, stats: Mapping[str, ColumnStats]) -> float:
+def estimate_selectivity(pred: Expr, stats: Mapping[str, ColumnStats],
+                         binding=None) -> float:
     """Estimated fraction of rows satisfying ``pred`` under independence +
     uniformity (the paper's model; good enough to size buffers, and the
-    run-time overflow flag catches the rest)."""
+    run-time overflow flag catches the rest).
+
+    Parameterized comparisons (``col op Param``) are resolved in order of
+    preference: the value from ``binding`` when one is supplied (the
+    prepare-time defaults of an auto-parameterized literal query), else
+    the WORST binding in the parameter's declared ``lo``/``hi`` range
+    (range selectivity is monotone in the bound, so the worst case sits at
+    an endpoint), else a fully conservative 1.0 — a prepared plan's
+    exchange capacities must stay sound for every future binding."""
     if isinstance(pred, BinOp):
         if pred.op == "and":
-            return (estimate_selectivity(pred.lhs, stats)
-                    * estimate_selectivity(pred.rhs, stats))
+            return (estimate_selectivity(pred.lhs, stats, binding)
+                    * estimate_selectivity(pred.rhs, stats, binding))
         if pred.op == "or":
-            a = estimate_selectivity(pred.lhs, stats)
-            b = estimate_selectivity(pred.rhs, stats)
+            a = estimate_selectivity(pred.lhs, stats, binding)
+            b = estimate_selectivity(pred.rhs, stats, binding)
             return min(1.0, a + b - a * b)
         norm = normalize_comparison(pred)
         if norm is not None:
             col, op, v = norm
             st = stats.get(col)
             if st is None:
-                return DEFAULT_SELECTIVITY
+                return 1.0 if isinstance(v, Param) else DEFAULT_SELECTIVITY
             if op == "==":
+                # value-independent under the distinct-count model, so a
+                # parameterized equality needs no binding
                 return 1.0 / st.n_distinct if st.n_distinct else DEFAULT_SELECTIVITY
             if op == "!=":
                 return 1.0 - (1.0 / st.n_distinct) if st.n_distinct else DEFAULT_SELECTIVITY
+            if isinstance(v, Param):
+                if binding is not None and v.name in binding:
+                    v = binding[v.name]
+                elif v.lo is not None and v.hi is not None:
+                    return max(_range_fraction(st, op, float(v.lo)),
+                               _range_fraction(st, op, float(v.hi)))
+                else:
+                    return 1.0
             try:
                 return _range_fraction(st, op, float(v))
             except (TypeError, ValueError):
                 return DEFAULT_SELECTIVITY
         return DEFAULT_SELECTIVITY
     if isinstance(pred, UnaryOp) and pred.op == "not":
-        return 1.0 - estimate_selectivity(pred.operand, stats)
+        return 1.0 - estimate_selectivity(pred.operand, stats, binding)
     if isinstance(pred, Col):
         # bare boolean column: no histogram, assume an even split
         return 0.5
-    if isinstance(pred, (Lit, Bin)):
+    if isinstance(pred, (Lit, Bin, Param)):
         return DEFAULT_SELECTIVITY
     return DEFAULT_SELECTIVITY
 

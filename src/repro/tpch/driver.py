@@ -11,16 +11,31 @@ registered name as sugar for its definition) and routes it
           logical query has one result schema on every path (the
           hand-written plans stay reachable via ``run(name)``).
 
+Prepared statements (the paper's §2/§3.1 compile-once model): every IR
+query is canonicalized into a parameterized SHAPE plus a literal binding
+(``repro.query.params``), and the plan cache keys on the shape alone — two
+queries differing only in predicate literals share ONE compiled executable
+and differ only in the scalars passed at run time.  ``prepare()`` exposes
+that seam directly: ``prepare(q).execute(binding)`` re-runs the compiled
+plan for any literals (Tier-1 routing re-checks bin-edge exactness per
+binding), and ``execute_batch`` vmaps the plan over a stacked parameter
+axis so N instances of one prepared shape run as a single device dispatch.
+
 Exchange buffer capacities come from the §3.2.2 selectivity model
 (``repro.tpch.capacities`` for the hand plans, ``repro.query.stats``
 inside the lowering) instead of per-query magic constants; explicit
-overrides still win.
+overrides still win.  For a prepared shape the capacities are sized from
+the prepare-time binding (auto-parameterized literals) or the worst
+binding in each parameter's declared range — the runtime ``overflow`` flag
+surfaces any binding that exceeds them.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Cluster, Table
@@ -29,10 +44,15 @@ from repro.cube import CubeRouter, build_cube
 from repro.query import (
     LoweringError,
     Query,
+    QueryError,
+    UnboundParamError,
     UncoveredQueryError,
     build_catalog,
     lower,
+    parameterize,
+    query_params,
     same_query,
+    validate,
 )
 from repro.tpch import capacities as tpch_capacities
 from repro.tpch import dbgen, reference
@@ -40,12 +60,15 @@ from repro.tpch import dbgen, reference
 
 @dataclasses.dataclass
 class QueryAnswer:
-    """Result of router-first execution: which tier served the query."""
+    """Result of router-first execution: which tier served the query.
+    ``overflow`` is a scalar bool for single executions and a per-lane
+    ``(B,)`` bool array for ``execute_batch`` (one overflowing lane never
+    poisons its batch siblings)."""
 
     value: object
     tier: int            # 1 = rollup cube, 2 = compiled SPMD plan
     source: str          # cube name (tier 1) or plan/query name (tier 2)
-    overflow: bool = False  # a Tier-2 exchange buffer overflowed
+    overflow: object = False  # a Tier-2 exchange buffer overflowed
 
 
 def _split_overflow(out):
@@ -60,6 +83,163 @@ def _split_overflow(out):
             and np.asarray(out[1]).dtype == np.bool_):
         return out[0], bool(np.asarray(out[1]))
     return out, False
+
+
+class _PlanEntry:
+    """One cached prepared SHAPE: the parameterized canonical query, its
+    ordered parameter signature, and the lazily compiled executables
+    (scalar + vmap-batched).  Shared by every query that canonicalizes to
+    this shape — the compile happens once."""
+
+    def __init__(self, shape: Query, stats_binding: dict):
+        self.shape = shape
+        self.params = query_params(shape.root)
+        self.stats_binding = dict(stats_binding)
+        self.fn = None          # compiled scalar executable
+        self.batched_fn = None  # compiled vmapped executable (jit re-
+                                # specializes per batch size)
+        self.bound = {}         # binding signature -> fn(columns) closure
+        self.route = (None, None)  # (router identity, Match|None) memo
+
+
+class PreparedQuery:
+    """A query prepared against one driver: compile once, execute for any
+    parameter binding (``execute``), or run many bindings as one vmapped
+    device dispatch (``execute_batch``).
+
+    ``params`` is the ordered parameter signature; ``defaults`` carries the
+    literal values extracted by auto-parameterization, so a prepared
+    literal query executes with no arguments and any subset can be
+    overridden per call.  Tier-1 cube routing happens at EXECUTE time —
+    the shape is matched once, but bin-edge exactness is re-checked per
+    binding, falling back to the compiled Tier-2 plan for off-edge or
+    out-of-range values.
+    """
+
+    def __init__(self, driver: "TPCHDriver", entry: _PlanEntry,
+                 defaults: dict, source: str):
+        self.driver = driver
+        self.entry = entry
+        self.defaults = dict(defaults)
+        self.source = source
+
+    @property
+    def params(self) -> tuple:
+        return self.entry.params
+
+    @property
+    def query(self) -> Query:
+        return self.entry.shape
+
+    # -- binding ------------------------------------------------------------
+    def binding(self, params=None) -> dict:
+        """Defaults merged with per-call overrides; raises
+        :class:`UnboundParamError` for missing or unknown names."""
+        b = dict(self.defaults)
+        if params:
+            b.update(params)
+        names = {p.name for p in self.entry.params}
+        missing = sorted(names - set(b))
+        if missing:
+            raise UnboundParamError(
+                f"missing binding(s) {missing} for prepared query "
+                f"{self.source!r} (parameters: {sorted(names)})"
+            )
+        unknown = sorted(set(b) - names)
+        if unknown:
+            raise UnboundParamError(
+                f"unknown parameter(s) {unknown} for prepared query "
+                f"{self.source!r} (parameters: {sorted(names)})"
+            )
+        return b
+
+    def _cast(self, b: dict) -> dict:
+        """Binding -> traced-argument pytree with STABLE dtypes (one aval
+        set per shape, so re-executions never retrace)."""
+        return {p.name: jnp.asarray(np.asarray(b[p.name], np.dtype(p.dtype)))
+                for p in self.entry.params}
+
+    # -- execution ----------------------------------------------------------
+    def _tier1(self, b: dict) -> Optional[QueryAnswer]:
+        router = self.driver.router
+        if router is None:
+            return None
+        if self.entry.route[0] is not router:
+            self.entry.route = (router, router.route_query(self.entry.shape))
+        match = self.entry.route[1]
+        if match is None:
+            return None
+        value = router.answer_bound(match, b)
+        if value is None:  # off-edge / out-of-range binding -> Tier 2
+            return None
+        value = np.asarray(value).reshape(-1, value.shape[-1])
+        return QueryAnswer(value, tier=1, source=match.route.cube.spec.name)
+
+    def _tier2_fn(self):
+        try:
+            return self.driver._ensure_compiled(self.entry)
+        except LoweringError as e:
+            raise UncoveredQueryError(
+                f"no rollup cube covers query {self.source} for this "
+                f"binding and it has no lowerable Tier-2 form: {e}"
+            ) from e
+
+    def execute(self, params=None) -> QueryAnswer:
+        b = self.binding(params)
+        ans = self._tier1(b)
+        if ans is not None:
+            return ans
+        fn = self._tier2_fn()
+        cols = self.driver._columns()
+        out = fn(cols, self._cast(b)) if self.entry.params else fn(cols)
+        out = jax.device_get(out)
+        overflow = bool(np.asarray(out.pop("overflow", False)))
+        value = out["value"] if set(out) == {"value"} else out
+        return QueryAnswer(value, tier=2, source=self.source,
+                           overflow=overflow)
+
+    def execute_batch(self, param_table) -> QueryAnswer:
+        """Run many bindings of this prepared shape as ONE vmapped SPMD
+        dispatch.  ``param_table`` is a mapping name -> length-B sequence
+        (missing names fall back to the defaults) or a sequence of B
+        binding dicts.  Every output gains a leading lane axis; the
+        ``overflow`` flag comes back per lane.  Batches always run the
+        compiled Tier-2 plan (Tier-1 exactness is a per-binding decision —
+        route single executions for that)."""
+        if not self.entry.params:
+            raise QueryError(
+                f"prepared query {self.source!r} has no parameters — "
+                f"execute_batch needs a parameterized shape"
+            )
+        if isinstance(param_table, Mapping):
+            seqs = {k: list(v) for k, v in param_table.items()}
+            sizes = {len(v) for v in seqs.values()}
+            if len(sizes) != 1:
+                raise QueryError(
+                    f"ragged param_table: column lengths {sorted(sizes)}"
+                )
+            B = sizes.pop()
+            rows = [{k: seqs[k][i] for k in seqs} for i in range(B)]
+        else:
+            rows = [dict(r) for r in param_table]
+            B = len(rows)
+        if B == 0:
+            raise QueryError("execute_batch needs at least one binding")
+        merged = [self.binding(r) for r in rows]
+        stacked = {
+            p.name: jnp.asarray(np.asarray([m[p.name] for m in merged],
+                                           np.dtype(p.dtype)))
+            for p in self.entry.params
+        }
+        self._tier2_fn()  # surface LoweringError as UncoveredQueryError
+        fn = self.driver._ensure_batched(self.entry)
+        out = jax.device_get(fn(self.driver._columns(), stacked))
+        overflow = out.pop("overflow", None)
+        overflow = (np.zeros(B, bool) if overflow is None
+                    else np.asarray(overflow))
+        value = out["value"] if set(out) == {"value"} else out
+        return QueryAnswer(value, tier=2, source=self.source,
+                           overflow=overflow)
 
 
 class TPCHDriver:
@@ -86,7 +266,10 @@ class TPCHDriver:
                                                self.cluster.num_nodes),
         )
         self._compiled = {}       # registry name -> compiled hand plan
-        self._compiled_ir = {}    # query name/id -> (query, compiled fn)
+        self._prepared = {}       # STRUCTURAL shape key -> _PlanEntry (LRU)
+        self.compile_events = []  # one label per XLA trace of a prepared
+                                  # plan ("<shape>" / "<shape>@batch") —
+                                  # the compile-once contract is testable
         self.cubes = {}
         self.router: CubeRouter | None = None
 
@@ -136,25 +319,104 @@ class TPCHDriver:
     def run_ir(self, name: str):
         return self.compile_ir(name)(self._columns())
 
-    IR_CACHE_MAX = 32  # compiled-executable LRU bound for ad-hoc queries
+    IR_CACHE_MAX = 32    # compiled-executable LRU bound for ad-hoc queries
+    BOUND_CACHE_MAX = 8  # per-shape LRU bound for literal-bound closures
+
+    # -- prepared statements (compile once, execute for any literals) ------
+    def prepare(self, q) -> PreparedQuery:
+        """Prepare an IR query (or a registered name): canonicalize it into
+        a parameterized shape + default binding, and return the (possibly
+        cached) :class:`PreparedQuery`.  The structural cache keys on the
+        SHAPE alone, so queries differing only in predicate literals share
+        one compiled executable; compilation itself is lazy — the first
+        Tier-2 execution pays it, Tier-1-served queries never do."""
+        if isinstance(q, str):
+            entry = plan_registry.get(q)
+            if entry.ir is None:
+                raise LoweringError(
+                    f"{q!r} has no IR definition — only the hand-written "
+                    f"plan; express it in the algebra first"
+                )
+            q = entry.ir
+        if not isinstance(q, Query):
+            raise TypeError(
+                f"prepare() takes a repro.query.Query (or a registered "
+                f"plan name), got {type(q)}"
+            )
+        validate(q.root, self.catalog)  # typed errors at prepare time
+        shape, defaults = parameterize(q)
+        source = q.name or "<lowered-ir>"
+        key = repr(shape.root)  # structural; same_query guards collisions
+        hit = self._prepared.get(key)
+        if hit is not None and same_query(hit.shape, shape):
+            self._prepared[key] = self._prepared.pop(key)  # LRU touch
+            return PreparedQuery(self, hit, defaults, source)
+        entry = _PlanEntry(shape, stats_binding=defaults)
+        self._prepared[key] = entry
+        while len(self._prepared) > self.IR_CACHE_MAX:
+            self._prepared.pop(next(iter(self._prepared)))
+        return PreparedQuery(self, entry, defaults, source)
+
+    def _lowered_plan(self, entry: _PlanEntry, label: str,
+                      batched: bool = False):
+        """Lower the shape and wrap it so every XLA trace is counted in
+        ``compile_events`` (jit executes the wrapper body only when it
+        traces, i.e. exactly once per compiled specialization)."""
+        plan = lower(entry.shape, self.catalog, wire=self.wire,
+                     binding=entry.stats_binding, batched=batched)
+        events = self.compile_events
+        if plan.params:
+            def wrapped(ctx, t, pvals):
+                events.append(label)
+                return plan(ctx, t, pvals)
+        else:
+            def wrapped(ctx, t):
+                events.append(label)
+                return plan(ctx, t)
+        wrapped.params = plan.params
+        return wrapped
+
+    def _ensure_compiled(self, entry: _PlanEntry):
+        if entry.fn is None:
+            label = entry.shape.name or "<lowered-ir>"
+            entry.fn = self.cluster.compile(
+                self._lowered_plan(entry, label), self.ctx, self.placed)
+        return entry.fn
+
+    def _ensure_batched(self, entry: _PlanEntry):
+        if entry.batched_fn is None:
+            label = f"{entry.shape.name or '<lowered-ir>'}@batch"
+            entry.batched_fn = self.cluster.compile(
+                self._lowered_plan(entry, label, batched=True),
+                self.ctx, self.placed, batch=True)
+        return entry.batched_fn
 
     def compile_query(self, q: Query):
-        """Lower + compile an arbitrary IR query.  Cached structurally (a
-        caller reconstructing the same query per request reuses the
-        executable; ``same_query`` guards against repr-hash collisions and
-        same-name variants), with an LRU bound so a stream of novel ad-hoc
-        queries cannot pin executables without limit."""
-        key = f"{q.name}@{hash(repr(q.root))}"
-        hit = self._compiled_ir.get(key)
-        if hit is not None and (hit[0] is q or same_query(hit[0], q)):
-            self._compiled_ir[key] = self._compiled_ir.pop(key)  # LRU touch
-            return hit[1]
-        plan = lower(q, self.catalog, wire=self.wire)
-        fn = self.cluster.compile(plan, self.ctx, self.placed)
-        self._compiled_ir[key] = (q, fn)
-        while len(self._compiled_ir) > self.IR_CACHE_MAX:
-            self._compiled_ir.pop(next(iter(self._compiled_ir)))
-        return fn
+        """Lower + compile an arbitrary IR query, returning a plain
+        ``fn(columns)`` with the query's own literals bound (the prepared
+        executable is shared structurally; the returned closure is
+        memoized per binding, so reconstructing the same query per request
+        reuses BOTH).  Parameterized queries without full defaults need
+        :meth:`prepare` instead."""
+        prep = self.prepare(q)
+        entry = prep.entry
+        fn = self._ensure_compiled(entry)  # eager typed errors
+        if not entry.params:
+            return fn
+        b = prep.binding()
+        key = tuple(sorted(b.items()))
+        if key in entry.bound:
+            entry.bound[key] = entry.bound.pop(key)  # LRU touch
+        else:
+            pvals = prep._cast(b)
+            entry.bound[key] = (
+                lambda columns, _fn=fn, _pv=pvals: _fn(columns, _pv))
+            # closures hold device scalars; a literal-streaming caller
+            # must not grow this without bound (the executable is shared
+            # regardless — evicted bindings just rebuild a closure)
+            while len(entry.bound) > self.BOUND_CACHE_MAX:
+                entry.bound.pop(next(iter(entry.bound)))
+        return entry.bound[key]
 
     # -- two-tier execution (repro.cube) -----------------------------------
     def build_cubes(self, specs=None):
@@ -171,16 +433,19 @@ class TPCHDriver:
         self.router = CubeRouter(list(self.cubes.values()))
         return self.cubes
 
-    def query(self, q) -> QueryAnswer:
+    def query(self, q, params=None) -> QueryAnswer:
         """Router-first execution of ONE query type.
 
         ``q`` is an IR ``Query`` (a registered name is accepted as sugar
-        for its definition).  A ``GroupAgg`` root covered by a rollup is
-        answered from the cube (Tier 1, host microseconds); anything else
-        runs as the compiled SPMD plan lowered from the IR over the base
-        tables (Tier 2).  Raises :class:`UncoveredQueryError` when no cube
-        covers the query and the IR has no lowerable form (e.g. min/max
-        measures off-edge)."""
+        for its definition); ``params`` optionally binds/overrides its
+        runtime parameters.  A ``GroupAgg`` root covered by a rollup is
+        answered from the cube (Tier 1, host microseconds) with bin-edge
+        exactness checked against THIS call's binding; anything else runs
+        as the compiled SPMD plan lowered from the parameterized shape
+        (Tier 2) — one executable per shape, re-executed for any literals.
+        Raises :class:`UncoveredQueryError` when no cube covers the query
+        and the IR has no lowerable form (e.g. min/max measures
+        off-edge)."""
         if isinstance(q, str):
             entry = plan_registry.get(q)
             if entry.ir is None:
@@ -192,28 +457,7 @@ class TPCHDriver:
                 f"query() takes a repro.query.Query (or a registered plan "
                 f"name), got {type(q)}"
             )
-        if self.router is not None:
-            match = self.router.route_query(q)
-            if match is not None:
-                value = self.router.answer(match.query, match.route)
-                value = np.asarray(value).reshape(-1, value.shape[-1])
-                return QueryAnswer(value, tier=1,
-                                   source=match.route.cube.spec.name)
-        # Tier 2 of an IR query is ALWAYS the lowered IR, so one logical
-        # query has one result schema regardless of parameters or coverage
-        # (hand plans remain reachable via run(name) — the escape hatch).
-        try:
-            fn = self.compile_query(q)
-        except LoweringError as e:
-            raise UncoveredQueryError(
-                f"no rollup cube covers query {q.name or '<anonymous>'} and "
-                f"it has no lowerable Tier-2 form: {e}"
-            ) from e
-        out = jax.device_get(fn(self._columns()))
-        overflow = bool(out.pop("overflow", False))
-        value = out["value"] if set(out) == {"value"} else out
-        return QueryAnswer(value, tier=2, source=q.name or "<lowered-ir>",
-                           overflow=overflow)
+        return self.prepare(q).execute(params)
 
     def oracle(self, name: str, **kw):
         """Float64 numpy reference via the registry's EXPLICIT oracle
