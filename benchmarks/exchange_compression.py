@@ -95,7 +95,9 @@ def run(sf: float = 0.02, repeat: int = 30, seed: int = 0):
             out = jax.tree.map(np.asarray, fn(cols))
             assert not out.get("overflow", False), f"{name}/{w} overflowed"
             outs[w] = extract(out)
-        a2a = {w: coll[w].bytes_by_op.get("all-to-all", 0) for w in fns}
+        by_kind = {w: coll[w].by_kind() for w in fns}
+        a2a = {w: by_kind[w].get("all-to-all", {}).get("bytes", 0)
+               for w in fns}
         reduction = a2a["raw"] / max(a2a["packed"], 1)
         # paired warm latencies: median of back-to-back ratios (robust to
         # host drift, same protocol as benchmarks/ir_overhead.py)
@@ -117,14 +119,21 @@ def run(sf: float = 0.02, repeat: int = 30, seed: int = 0):
             rows.append({
                 "query": name, "wire": w,
                 "all_to_all_bytes": a2a[w],
-                "all_to_all_count": coll[w].count_by_op.get("all-to-all", 0),
+                "all_to_all_count": by_kind[w].get("all-to-all",
+                                                   {}).get("count", 0),
+                # labeled per-kind breakdown (CollectiveStats.by_kind): the
+                # non-all-to-all collectives are invariant across wires, so
+                # a reduction that moved bytes to another kind would show
+                "collectives": " ".join(
+                    f"{k}:{v['bytes']}Bx{v['count']}"
+                    for k, v in by_kind[w].items()),
                 "latency_ms": raw_ms if w == "raw" else packed_ms,
                 "reduction_x": 1.0 if w == "raw" else reduction,
                 "oracle_ok": oracle_ok,
             })
     emit("exchange_compression", rows,
          ["query", "wire", "all_to_all_bytes", "all_to_all_count",
-          "latency_ms", "reduction_x", "oracle_ok"])
+          "collectives", "latency_ms", "reduction_x", "oracle_ok"])
 
     # oracle parity of the standard lowered queries under packed wire, on
     # both collective backends (one_factor lowers all-to-all to ppermutes)

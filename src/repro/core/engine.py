@@ -35,6 +35,10 @@ class PlanContext:
     scale_factor: float = 1.0
     wire: str = "packed"                     # exchange wire format selector
     wires: Mapping[str, WireFormat] = dataclasses.field(default_factory=dict)
+    # observability hub (repro.obs.Observer) threaded to the exchange
+    # layer: collective exchanges emit one trace-time event per compiled
+    # specialization.  None = uninstrumented (hand-built contexts).
+    obs: object = None
 
     def part(self, table: str) -> RangePartitioning:
         return self.parts[table]
@@ -73,7 +77,7 @@ class Cluster:
 
     def context(self, tables: Mapping[str, Table], capacities=None, *,
                 backend: str = "xla", scale_factor: float = 1.0,
-                wire: str = "packed", wires=None) -> PlanContext:
+                wire: str = "packed", wires=None, obs=None) -> PlanContext:
         parts = {
             name: RangePartitioning(t.num_rows, 1 if t.replicated else self.num_nodes)
             for name, t in tables.items()
@@ -87,6 +91,7 @@ class Cluster:
             scale_factor=scale_factor,
             wire=wire,
             wires=dict(wires or {}),
+            obs=obs,
         )
 
     # -- compilation -------------------------------------------------------

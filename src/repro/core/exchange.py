@@ -351,6 +351,8 @@ def request_reply(
     backend: str = "xla",
     reply_dtype=None,
     wire: Optional[WireFormat] = None,
+    observer=None,
+    label: str = "",
 ):
     """The paper's explicit remote request pattern (§3.2.2 Alt-1):
 
@@ -372,6 +374,15 @@ def request_reply(
     """
     P = lax.axis_size(axis)
     wf = wire or WireFormat.raw()
+    if observer is not None:
+        # fires at TRACE time — once per compiled specialization, with the
+        # exchange's static shape (the dynamic byte truth comes from HLO)
+        observer.event(
+            "exchange.request_reply", cat="exchange", label=label,
+            capacity=int(capacity), wire=wf.kind,
+            key_bits=int(wf.key_bits), backend=backend,
+            collectives=2 if wf.packed else 3,
+        )
     order = None
     if wf.packed:
         order, keys, mask, owner = _sort_by_key(keys, mask, owner)
@@ -425,6 +436,8 @@ def exchange_by_owner(
     axis: str = "nodes",
     backend: str = "xla",
     wire: Optional[WireFormat] = None,
+    observer=None,
+    label: str = "",
 ):
     """Route (key, value) pairs to the owner node of each key (used when a
     group-by key lies on a remote join path — paper Q13/Q15/Q21).
@@ -441,6 +454,13 @@ def exchange_by_owner(
     P = lax.axis_size(axis)
     wf = wire or WireFormat.raw()
     fused = wf.packed and values.dtype.itemsize == 4
+    if observer is not None:
+        observer.event(
+            "exchange.by_owner", cat="exchange", label=label,
+            capacity=int(capacity), wire=wf.kind,
+            key_bits=int(wf.key_bits), backend=backend,
+            collectives=1 if fused else 3,
+        )
     if fused:
         # no un-sort needed: callers consume the received buckets by key
         _, keys, values, mask, owner = _sort_by_key(keys, values, mask, owner)

@@ -34,6 +34,8 @@ def alt1_request(
     axis: str = "nodes",
     backend: str = "xla",
     wire=None,
+    observer=None,
+    label: str = "",
 ):
     """Request-based semi-join: returns (bits aligned with keys, overflow).
 
@@ -41,7 +43,9 @@ def alt1_request(
     remote predicate on the OWNER's partition, given local row indices.
     ``wire`` selects the exchange encoding (``exchange.WireFormat``;
     default raw) — a packed format ships EF-coded requests with the mask
-    folded in and bitset-packed reply bits.
+    folded in and bitset-packed reply bits.  ``observer``/``label`` are
+    forwarded to the exchange layer, which emits one trace-time event per
+    compiled specialization.
     """
     def lookup(req_keys, req_mask):
         local_idx = part.local_index(req_keys)
@@ -57,6 +61,8 @@ def alt1_request(
         backend=backend,
         reply_dtype=jnp.bool_,
         wire=wire,
+        observer=observer,
+        label=label,
     )
     return bits & mask, overflow
 

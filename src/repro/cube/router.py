@@ -257,10 +257,22 @@ def _filter_mask(dim, flt: Filter):
 
 
 class CubeRouter:
-    """Match queries (IR or derived AggQuery form) against built cubes."""
+    """Match queries (IR or derived AggQuery form) against built cubes.
 
-    def __init__(self, cubes: Sequence[Cube]):
+    With an :class:`repro.obs.Observer` attached (``obs``), routing
+    decisions feed the metrics registry: ``router.match`` / ``router.miss``
+    count tier-1 coverage at route time, and ``router.offedge_fallback``
+    counts bound executions a matched route had to hand back to Tier 2
+    because the binding was not exactly expressible on the cube's bin
+    edges."""
+
+    def __init__(self, cubes: Sequence[Cube], obs=None):
         self.cubes = list(cubes)
+        self.obs = obs
+
+    def _count(self, name: str):
+        if self.obs is not None and self.obs.metrics is not None:
+            self.obs.metrics.counter(name).inc()
 
     def add(self, cube: Cube):
         self.cubes.append(cube)
@@ -309,6 +321,14 @@ class CubeRouter:
             if route is not None and (
                     best is None or route.cells < best.route.cells):
                 best = Match(query=aggq, route=route)
+        self._count("router.match" if best is not None else "router.miss")
+        if best is not None and self.obs is not None:
+            self.obs.event(
+                "router.route", cat="route", query=q.name or "<anon>",
+                cube=best.route.cube.spec.name,
+                rollup="x".join(best.route.rollup),
+                cells=best.route.cells,
+            )
         return best
 
     # -- answering ----------------------------------------------------------
@@ -333,6 +353,7 @@ class CubeRouter:
                     f, value=v.item() if hasattr(v, "item") else v)
             resolved.append(f)
         if any(_filter_mask(spec.dim(f.dim), f) is None for f in resolved):
+            self._count("router.offedge_fallback")
             return None
         return self.answer(dataclasses.replace(q, filters=tuple(resolved)),
                            match.route)

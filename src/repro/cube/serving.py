@@ -3,21 +3,48 @@
 One implementation of "time Tier 1 vs Tier 2 for a query", used by both
 ``launch/serve_olap.py --cubes`` and ``benchmarks/cube_speedup.py`` so the
 two reports can't drift.  The query is ONE IR object: Tier 1 is the
-router's host-side rollup slice (best-of-N, N floored at 10 because a
-single slice is microseconds); Tier 2 is the SAME query lowered to a
-compiled SPMD plan over the base tables — the path ``driver.query()``
-takes on a cube miss — warm, best-of-``repeat``.
+router's host-side rollup slice (N floored at 10 because a single slice is
+microseconds); Tier 2 is the SAME query lowered to a compiled SPMD plan
+over the base tables — the path ``driver.query()`` takes on a cube miss —
+warm, over ``repeat`` runs.
+
+Reported statistics are the TRIMMED MEDIAN (drop the top/bottom ~10% of
+repeats when there are enough of them, then take the median — robust to
+scheduler noise in both directions, unlike min-of-N which reports a best
+case no serving tier sustains) and the p99 tail.  Every repeat is also recorded into the
+driver's metrics registry (``serving.tier1_us`` / ``serving.tier2_us``
+histograms) so ``--metrics`` reports cross-query percentiles.
 """
 from __future__ import annotations
 
 import time
 
 
+def _trimmed_median(samples) -> float:
+    """Median after dropping the top/bottom ~10% of samples (one sample
+    each end per 10, only when n >= 5 so tiny repeat counts keep every
+    run).  The trim makes the reported center insensitive to warmup or
+    preemption outliers even at small n."""
+    xs = sorted(samples)
+    k = len(xs) // 10 if len(xs) >= 10 else (1 if len(xs) >= 5 else 0)
+    xs = xs[k:len(xs) - k] if k else xs
+    n = len(xs)
+    mid = n // 2
+    return xs[mid] if n % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
+
+def _p99(samples) -> float:
+    xs = sorted(samples)
+    return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+
 def measure_query(driver, q, *, repeat: int = 5):
     """Time one cube-covered IR query on both tiers.
 
-    Returns ``{"route", "tier1_s", "tier2_s", "plan"}``, or None when no
-    rollup covers the query (Tier 2 only — nothing to compare).
+    Returns ``{"route", "tier1_s", "tier2_s", "tier1_p99_s",
+    "tier2_p99_s", "plan"}``, or None when no rollup covers the query
+    (Tier 2 only — nothing to compare).  ``tier1_s``/``tier2_s`` are
+    trimmed medians over the repeats; ``*_p99_s`` the observed tails.
     """
     import jax
 
@@ -27,20 +54,32 @@ def measure_query(driver, q, *, repeat: int = 5):
     cols = {n: t.columns for n, t in driver.placed.items()}
 
     driver.router.answer(match.query, match.route)  # warmup (numpy setup)
-    t1 = min(_clock(lambda: driver.router.answer(match.query, match.route))
-             for _ in range(max(repeat, 10)))
+    s1 = [_clock(lambda: driver.router.answer(match.query, match.route))
+          for _ in range(max(repeat, 10))]
 
     # Tier 2 is the same query lowered to a compiled SPMD plan — exactly
     # what driver.query() would run on a cube miss
     fn = driver.compile_query(q)
     plan_name = f"{q.name or 'ir'} (lowered)"
     jax.block_until_ready(fn(cols))  # warmup (first execute compiles)
-    t2 = min(_clock(lambda: jax.block_until_ready(fn(cols)))
-             for _ in range(max(repeat, 3)))
+    s2 = [_clock(lambda: jax.block_until_ready(fn(cols)))
+          for _ in range(max(repeat, 3))]
+
+    obs = getattr(driver, "obs", None)
+    if obs is not None and obs.metrics is not None:
+        h1 = obs.metrics.histogram("serving.tier1_us")
+        h2 = obs.metrics.histogram("serving.tier2_us")
+        for s in s1:
+            h1.record(s * 1e6)
+        for s in s2:
+            h2.record(s * 1e6)
+
     return {
         "route": match.route,
-        "tier1_s": t1,
-        "tier2_s": t2,
+        "tier1_s": _trimmed_median(s1),
+        "tier2_s": _trimmed_median(s2),
+        "tier1_p99_s": _p99(s1),
+        "tier2_p99_s": _p99(s2),
         "plan": plan_name,
     }
 

@@ -49,14 +49,38 @@ def shape_bytes(shape_str: str) -> int:
     return total
 
 
+@dataclasses.dataclass(frozen=True)
+class CollectiveInstr:
+    """One collective instruction of the optimized module, in program
+    order — the unit the observability layer attributes to a plan's
+    exchanges (the i-th request semi-join owns a known, contiguous run of
+    all-to-alls)."""
+
+    name: str   # HLO instruction name
+    kind: str   # base op: all-to-all / all-reduce / all-gather / ...
+    bytes: int  # operand bytes (per device)
+
+
 @dataclasses.dataclass
 class CollectiveStats:
     bytes_by_op: dict
     count_by_op: dict
+    # program-ordered instruction records; defaults to () so callers that
+    # build CollectiveStats by hand (tests) stay valid
+    instructions: tuple = ()
 
     @property
     def total_bytes(self) -> int:
         return sum(self.bytes_by_op.values())
+
+    def by_kind(self) -> dict:
+        """Labeled per-kind breakdown: ``{kind: {"bytes": b, "count": c}}``
+        over every collective kind seen (all-to-all / all-reduce /
+        all-gather / reduce-scatter / collective-permute)."""
+        return {
+            k: {"bytes": self.bytes_by_op[k], "count": self.count_by_op[k]}
+            for k in sorted(self.bytes_by_op)
+        }
 
 
 _HLO_COMMENT_RE = re.compile(r"/\*.*?\*/")
@@ -80,6 +104,7 @@ def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
             shapes[name] = shape
     bytes_by_op: dict[str, int] = {}
     count_by_op: dict[str, int] = {}
+    instructions: list[CollectiveInstr] = []
     for line in hlo_text.splitlines():
         m = _INSTR_RE.match(line)
         if not m:
@@ -104,7 +129,8 @@ def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
             obytes = shape_bytes(result_shape)
         bytes_by_op[base] = bytes_by_op.get(base, 0) + obytes
         count_by_op[base] = count_by_op.get(base, 0) + 1
-    return CollectiveStats(bytes_by_op, count_by_op)
+        instructions.append(CollectiveInstr(name=name, kind=base, bytes=obytes))
+    return CollectiveStats(bytes_by_op, count_by_op, tuple(instructions))
 
 
 @dataclasses.dataclass

@@ -7,7 +7,11 @@ queries interactively or as a batch (the paper's evaluation driver).
 --cubes enables two-tier serving: the Tier-1 rollup cubes are materialized
 up front (one distributed scan each) and every cube-covered serving query
 is reported with both its Tier-1 (rollup slice) and Tier-2 (precompiled
-plan) latency.
+plan) latency, now with p99 tails next to the trimmed-median centers.
+
+--metrics dumps the driver's metrics registry (tier counters, plan-cache
+hit/miss, latency histograms) on exit; --trace PATH writes the structured
+trace as Chrome-trace JSON loadable in https://ui.perfetto.dev.
 """
 from __future__ import annotations
 
@@ -32,15 +36,17 @@ def _serve_cubes(d, repeat: int):
               f"{cube.rows_scanned} rows in {cube.build_seconds:.2f}s")
     print(f"tier-1 materialization total: {build_s:.2f}s\n")
 
-    print(f"{'query':>22s} {'tier1[us]':>10s} {'tier2[ms]':>10s} {'speedup':>8s}"
-          f"  tier2 plan")
+    print(f"{'query':>22s} {'tier1[us]':>10s} {'p99[us]':>9s} "
+          f"{'tier2[ms]':>10s} {'p99[ms]':>9s} {'speedup':>8s}  tier2 plan")
     for name, make_query in tpch_cubes.SERVING_QUERIES.items():
         q = make_query()
         m = measure_query(d, q, repeat=repeat)
         if m is None:
             print(f"{name:>22s} {'--':>10s} (not cube-covered; tier 2 only)")
             continue
-        print(f"{name:>22s} {m['tier1_s']*1e6:10.1f} {m['tier2_s']*1e3:10.2f} "
+        print(f"{name:>22s} {m['tier1_s']*1e6:10.1f} "
+              f"{m['tier1_p99_s']*1e6:9.1f} {m['tier2_s']*1e3:10.2f} "
+              f"{m['tier2_p99_s']*1e3:9.2f} "
               f"{m['tier2_s']/m['tier1_s']:7.0f}x  {m['plan']}")
     return 0
 
@@ -55,6 +61,11 @@ def main(argv=None):
     p.add_argument("--cubes", action="store_true",
                    help="two-tier mode: build rollup cubes, report tier-1 vs "
                         "tier-2 latency per serving query")
+    p.add_argument("--metrics", action="store_true",
+                   help="print the driver's metrics-registry report on exit")
+    p.add_argument("--trace", metavar="PATH", default=None,
+                   help="write the structured trace as Chrome-trace JSON "
+                        "(loadable in Perfetto) on exit")
     args = p.parse_args(argv)
 
     import jax
@@ -64,32 +75,42 @@ def main(argv=None):
     from repro.tpch.driver import TPCHDriver
 
     d = TPCHDriver(sf=args.sf, seed=args.seed, backend=args.backend)
-    if args.cubes:
+    try:
+        if args.cubes:
+            print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
+                  f"two-tier serving")
+            if args.queries:
+                print("note: --queries is ignored with --cubes (the fixed "
+                      "tpch.cubes.SERVING_QUERIES set is measured)")
+            return _serve_cubes(d, args.repeat)
+        names = args.queries or list(PLANS)
         print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
-              f"two-tier serving")
-        if args.queries:
-            print("note: --queries is ignored with --cubes (the fixed "
-                  "tpch.cubes.SERVING_QUERIES set is measured)")
-        return _serve_cubes(d, args.repeat)
-    names = args.queries or list(PLANS)
-    print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
-          f"backend {args.backend}")
-    print(f"{'query':>14s} {'compile[s]':>10s} {'run[ms]':>9s}")
-    for name in names:
-        t0 = time.monotonic()
-        fn = d.compile(name)
-        compile_s = time.monotonic() - t0
-        cols = {n: t.columns for n, t in d.placed.items()}
-        out = fn(cols)  # warmup (first execute)
-        jax.block_until_ready(out)
-        times = []
-        for _ in range(args.repeat):
-            t0 = time.monotonic()
-            out = fn(cols)
-            jax.block_until_ready(out)
-            times.append(time.monotonic() - t0)
-        print(f"{name:>14s} {compile_s:10.2f} {min(times)*1e3:9.2f}")
-    return 0
+              f"backend {args.backend}")
+        print(f"{'query':>14s} {'compile[s]':>10s} {'run[ms]':>9s}")
+        run_hist = d.obs.metrics.histogram("serve.run_us")
+        for name in names:
+            with d.obs.span("serve", cat="serve", query=name) as sp:
+                t0 = time.monotonic()
+                fn = d.compile(name)
+                compile_s = time.monotonic() - t0
+                cols = {n: t.columns for n, t in d.placed.items()}
+                with d.obs.span("warmup", cat="exec"):
+                    jax.block_until_ready(fn(cols))  # first execute
+                times = []
+                for _ in range(args.repeat):
+                    with d.obs.span("execute", cat="exec"):
+                        t0 = time.monotonic()
+                        jax.block_until_ready(fn(cols))
+                        times.append(time.monotonic() - t0)
+                    run_hist.record(times[-1] * 1e6)
+                sp.set(compile_s=compile_s, best_ms=min(times) * 1e3)
+            print(f"{name:>14s} {compile_s:10.2f} {min(times)*1e3:9.2f}")
+        return 0
+    finally:
+        if args.metrics:
+            print("\n" + d.obs.metrics.report())
+        if args.trace:
+            print(f"\ntrace written to {d.obs.save_chrome_trace(args.trace)}")
 
 
 if __name__ == "__main__":

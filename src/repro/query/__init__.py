@@ -51,5 +51,5 @@ from repro.query.ir import (  # noqa: F401
     substitute,
     validate,
 )
-from repro.query.lower import lower  # noqa: F401
+from repro.query.lower import explain_chain, lower  # noqa: F401
 from repro.query.params import bind_params, parameterize  # noqa: F401

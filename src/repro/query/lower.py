@@ -97,6 +97,8 @@ class _SemiJoinPlan:
     capacity: int   # derived request-exchange bucket capacity (0 if unused)
     key: str = ""   # PlanContext.capacities override key ("<name>_sj<i>")
     wire: WireFormat = WireFormat.raw()  # packed format of the exchange
+    table: str = ""    # semi-join target table (observability/EXPLAIN)
+    gamma: float = 0.0  # predicted target-predicate selectivity
 
 
 def _decide_semijoins(root, catalog: Catalog, query_name=None,
@@ -166,10 +168,71 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None,
             decisions[id(node)] = _SemiJoinPlan(
                 alt=alt, capacity=cap if alt == "request" else 0,
                 key=f"{query_name or 'query'}_sj{len(decisions)}",
-                wire=wf,
+                wire=wf, table=node.table, gamma=gamma,
             )
             sel *= gamma
     return decisions
+
+
+def explain_chain(query: Query, catalog: Catalog, *, wire: str = "packed",
+                  binding=None) -> list:
+    """Scan-first per-operator annotations for EXPLAIN: each operator as a
+    dict carrying the cost model's view of it — predicted selectivity for
+    filters/probes, the chosen alternative / derived capacity / wire
+    format for semi-joins (exactly what :func:`lower` would decide, via
+    the same ``_decide_semijoins`` call), group/agg shape for roots.
+    Purely static: nothing is compiled or executed."""
+    root = query.root
+    validate(root, catalog)
+    decisions = _decide_semijoins(root, catalog, query_name=query.name,
+                                  wire=wire, binding=binding)
+    rows = []
+    base, sel = None, 1.0
+    for node in _chain(root):
+        if isinstance(node, Scan):
+            base, sel = node.table, 1.0
+            rows.append({"op": "Scan", "table": node.table,
+                         "rows": catalog.table(node.table).num_rows})
+            continue
+        tinfo = catalog.table(base)
+        if isinstance(node, Filter):
+            s = qstats.estimate_selectivity(node.pred, tinfo.stats, binding)
+            sel *= s
+            rows.append({"op": "Filter", "pred": node.pred, "sel": s,
+                         "cum_sel": sel})
+        elif isinstance(node, Project):
+            rows.append({"op": "Project",
+                         "cols": [n for n, _ in node.cols]})
+        elif isinstance(node, SemiJoin):
+            d = decisions[id(node)]
+            sel *= d.gamma
+            rows.append({
+                "op": "SemiJoin", "table": node.table, "key": node.key,
+                "pred": node.pred, "alt": d.alt, "capacity": d.capacity,
+                "capacity_key": d.key, "wire": d.wire, "gamma": d.gamma,
+                "cum_sel": sel,
+            })
+        elif isinstance(node, Exists):
+            sel *= qstats.DEFAULT_SELECTIVITY
+            rows.append({"op": "Exists", "table": node.table,
+                         "sel": qstats.DEFAULT_SELECTIVITY, "cum_sel": sel})
+        elif isinstance(node, GroupAggByKey):
+            base, sel = node.into, 1.0
+            rows.append({"op": "GroupAggByKey", "into": node.into,
+                         "aggs": [a.name for a in node.aggs]})
+        elif isinstance(node, GroupAgg):
+            groups = math.prod(k.cardinality for k in node.keys) \
+                if node.keys else 1
+            method = node.method
+            if method == "auto":
+                method = "onehot" if groups <= ONEHOT_MAX_GROUPS else "dense"
+            rows.append({"op": "GroupAgg", "groups": groups,
+                         "method": method,
+                         "keys": [k.name for k in node.keys],
+                         "aggs": [a.name for a in node.aggs]})
+        elif isinstance(node, TopK):
+            rows.append({"op": "TopK", "k": node.k})
+    return rows
 
 
 def _has_division(e) -> bool:
@@ -255,7 +318,7 @@ def _measure_stack(aggs, cols, mask, pv=None):
 
 
 def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
-          binding=None, batched: bool = False):
+          binding=None, batched: bool = False, obs=None):
     """Compile ``query`` into ``plan(ctx, tables)`` (see module docstring
     for the output contract).  ``wire`` selects the exchange encoding the
     §3.2.2 byte-accurate cost model assumes ("packed" bit-packs request
@@ -318,6 +381,14 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
 
     sj_plans = _decide_semijoins(root, catalog, query_name=query.name,
                                  wire=wire, binding=binding)
+    if obs is not None:
+        obs.event(
+            "lower", cat="plan",
+            query=query.name or "<lowered-ir>", batched=batched, wire=wire,
+            n_params=len(params),
+            semijoins=" ".join(f"{d.key}:{d.alt}" for d in sj_plans.values())
+            or "none",
+        )
 
     def _eval(node, ctx, t, pv) -> _Stream:
         if isinstance(node, Scan):
@@ -365,6 +436,7 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
                     axis=ctx.axis, backend=ctx.backend,
                     wire=(plan.wire if ctx.wire == "packed"
                           else WireFormat.raw()),
+                    observer=getattr(ctx, "obs", None), label=plan.key,
                 )
                 s.and_mask(bits)
                 s.overflow = s.overflow | ovf
@@ -520,4 +592,7 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
         def plan(ctx, t):
             return _run(ctx, t, None)
     plan.params = params
+    # the static semi-join decisions, in chain order (observability /
+    # EXPLAIN attribute per-exchange collective bytes against these)
+    plan.semijoins = tuple(sj_plans.values())
     return plan

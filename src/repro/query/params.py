@@ -64,15 +64,19 @@ def _param_dtype(value) -> Optional[str]:
     return None
 
 
-def parameterize(q: Query) -> tuple:
+def parameterize(q: Query, obs=None) -> tuple:
     """``(shape, binding)``: ``q`` with every predicate comparison literal
     replaced by an auto-named ``Param`` (deterministic ``_p0, _p1, ...`` in
     scan-first order), plus the extracted name -> value binding.  Explicit
     user params are untouched; a ``method='kernel'`` GroupAgg root skips
     the rewrite entirely (the fused Pallas kernel consumes its cutoff as a
-    compile-time constant)."""
+    compile-time constant).  ``obs`` (an :class:`repro.obs.Observer`)
+    records the extraction as a trace event."""
     root = q.root
     if isinstance(root, GroupAgg) and root.method == "kernel":
+        if obs is not None:
+            obs.event("parameterize", cat="plan", query=q.name or "<anon>",
+                      extracted=0, skipped="kernel")
         return q, {}
     taken = {p.name for p in query_params(root)}
     binding: dict = {}
@@ -126,7 +130,12 @@ def parameterize(q: Query) -> tuple:
             return dataclasses.replace(node, child=child, pred=pred)
         return dataclasses.replace(node, child=child)
 
-    return Query(root=walk(root), name=q.name), binding
+    shape = Query(root=walk(root), name=q.name)
+    if obs is not None:
+        obs.event("parameterize", cat="plan", query=q.name or "<anon>",
+                  extracted=len(binding),
+                  params=" ".join(sorted(binding)) or "none")
+    return shape, binding
 
 
 def bind_params(q: Query, binding: Mapping[str, object]) -> Query:

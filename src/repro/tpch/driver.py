@@ -32,6 +32,7 @@ surfaces any binding that exceeds them.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Mapping, Optional
 
 import jax
@@ -41,6 +42,12 @@ import numpy as np
 from repro.core import Cluster, Table
 from repro.core import plans as plan_registry
 from repro.cube import CubeRouter, build_cube
+from repro.obs import (
+    ExplainReport,
+    Observer,
+    SemiJoinInfo,
+    attribute_semijoin_bytes,
+)
 from repro.query import (
     LoweringError,
     Query,
@@ -48,6 +55,7 @@ from repro.query import (
     UnboundParamError,
     UncoveredQueryError,
     build_catalog,
+    explain_chain,
     lower,
     parameterize,
     query_params,
@@ -100,6 +108,8 @@ class _PlanEntry:
                                 # specializes per batch size)
         self.bound = {}         # binding signature -> fn(columns) closure
         self.route = (None, None)  # (router identity, Match|None) memo
+        self.semijoins = ()     # static semi-join decisions of the lowering
+        self.profile = None     # lazy HLO CollectiveStats (explain_analyze)
 
 
 class PreparedQuery:
@@ -117,11 +127,12 @@ class PreparedQuery:
     """
 
     def __init__(self, driver: "TPCHDriver", entry: _PlanEntry,
-                 defaults: dict, source: str):
+                 defaults: dict, source: str, cache_hit: bool = False):
         self.driver = driver
         self.entry = entry
         self.defaults = dict(defaults)
         self.source = source
+        self.cache_hit = cache_hit  # structural plan cache: shape was reused
 
     @property
     def params(self) -> tuple:
@@ -185,18 +196,36 @@ class PreparedQuery:
             ) from e
 
     def execute(self, params=None) -> QueryAnswer:
-        b = self.binding(params)
-        ans = self._tier1(b)
-        if ans is not None:
-            return ans
-        fn = self._tier2_fn()
-        cols = self.driver._columns()
-        out = fn(cols, self._cast(b)) if self.entry.params else fn(cols)
-        out = jax.device_get(out)
-        overflow = bool(np.asarray(out.pop("overflow", False)))
-        value = out["value"] if set(out) == {"value"} else out
-        return QueryAnswer(value, tier=2, source=self.source,
-                           overflow=overflow)
+        obs = self.driver.obs
+        mreg = obs.metrics
+        t_start = time.perf_counter()
+        with obs.span("query", source=self.source,
+                      cache="hit" if self.cache_hit else "miss") as sp:
+            b = self.binding(params)
+            with obs.span("route", cat="route"):
+                ans = self._tier1(b)
+            if ans is not None:
+                sp.set(tier=1, route=ans.source)
+                mreg.counter("driver.tier1").inc()
+                mreg.histogram("query.tier1_us").record(
+                    (time.perf_counter() - t_start) * 1e6)
+                return ans
+            fn = self._tier2_fn()
+            cols = self.driver._columns()
+            with obs.span("execute", cat="exec"):
+                out = fn(cols, self._cast(b)) if self.entry.params \
+                    else fn(cols)
+                out = jax.device_get(out)
+            overflow = bool(np.asarray(out.pop("overflow", False)))
+            value = out["value"] if set(out) == {"value"} else out
+            sp.set(tier=2, route=self.source, overflow=overflow)
+            mreg.counter("driver.tier2").inc()
+            if overflow:
+                mreg.counter("exchange.overflow").inc()
+            mreg.histogram("query.tier2_us").record(
+                (time.perf_counter() - t_start) * 1e6)
+            return QueryAnswer(value, tier=2, source=self.source,
+                               overflow=overflow)
 
     def execute_batch(self, param_table) -> QueryAnswer:
         """Run many bindings of this prepared shape as ONE vmapped SPMD
@@ -231,25 +260,40 @@ class PreparedQuery:
                                            np.dtype(p.dtype)))
             for p in self.entry.params
         }
-        self._tier2_fn()  # surface LoweringError as UncoveredQueryError
-        fn = self.driver._ensure_batched(self.entry)
-        out = jax.device_get(fn(self.driver._columns(), stacked))
-        overflow = out.pop("overflow", None)
-        overflow = (np.zeros(B, bool) if overflow is None
-                    else np.asarray(overflow))
-        value = out["value"] if set(out) == {"value"} else out
-        return QueryAnswer(value, tier=2, source=self.source,
-                           overflow=overflow)
+        obs = self.driver.obs
+        mreg = obs.metrics
+        with obs.span("query.batch", source=self.source, lanes=B) as sp:
+            self._tier2_fn()  # surface LoweringError as UncoveredQueryError
+            fn = self.driver._ensure_batched(self.entry)
+            with obs.span("execute", cat="exec"):
+                out = jax.device_get(fn(self.driver._columns(), stacked))
+            overflow = out.pop("overflow", None)
+            overflow = (np.zeros(B, bool) if overflow is None
+                        else np.asarray(overflow))
+            value = out["value"] if set(out) == {"value"} else out
+            n_ovf = int(np.asarray(overflow).sum())
+            sp.set(tier=2, overflow_lanes=n_ovf)
+            mreg.counter("driver.batch").inc()
+            mreg.counter("driver.batch_lanes").inc(B)
+            if n_ovf:
+                mreg.counter("exchange.overflow").inc(n_ovf)
+            return QueryAnswer(value, tier=2, source=self.source,
+                               overflow=overflow)
 
 
 class TPCHDriver:
     def __init__(self, sf: float, cluster: Cluster | None = None, seed: int = 0,
-                 capacities=None, backend: str = "xla", wire: str = "packed"):
+                 capacities=None, backend: str = "xla", wire: str = "packed",
+                 obs: Observer | None = None):
         self.cluster = cluster or Cluster()
         self.sf = sf
         self.seed = seed
         self.backend = backend
         self.wire = wire
+        # the observability hub: threaded (never global) through routing,
+        # lowering and the exchange layer; on by default — pass
+        # Observer(enabled=False) to drop tracing (metrics stay live)
+        self.obs = obs if obs is not None else Observer()
         # §3.2.2-derived capacities for the hand plans; explicit overrides win
         self.capacities = tpch_capacities.derive(sf, self.cluster.num_nodes)
         self.capacities.update(capacities or {})
@@ -264,9 +308,14 @@ class TPCHDriver:
             wire=wire,
             wires=tpch_capacities.wire_formats(self.tables,
                                                self.cluster.num_nodes),
+            obs=self.obs,
         )
         self._compiled = {}       # registry name -> compiled hand plan
         self._prepared = {}       # STRUCTURAL shape key -> _PlanEntry (LRU)
+        self._profiling = False   # True while explain_analyze dumps HLO —
+                                  # that re-trace is an artifact, not a
+                                  # compile event
+
         self.compile_events = []  # one label per XLA trace of a prepared
                                   # plan ("<shape>" / "<shape>@batch") —
                                   # the compile-once contract is testable
@@ -344,34 +393,51 @@ class TPCHDriver:
                 f"plan name), got {type(q)}"
             )
         validate(q.root, self.catalog)  # typed errors at prepare time
-        shape, defaults = parameterize(q)
+        shape, defaults = parameterize(q, obs=self.obs)
         source = q.name or "<lowered-ir>"
         key = repr(shape.root)  # structural; same_query guards collisions
         hit = self._prepared.get(key)
         if hit is not None and same_query(hit.shape, shape):
             self._prepared[key] = self._prepared.pop(key)  # LRU touch
-            return PreparedQuery(self, hit, defaults, source)
+            self.obs.metrics.counter("plan_cache.hit").inc()
+            return PreparedQuery(self, hit, defaults, source, cache_hit=True)
         entry = _PlanEntry(shape, stats_binding=defaults)
         self._prepared[key] = entry
         while len(self._prepared) > self.IR_CACHE_MAX:
             self._prepared.pop(next(iter(self._prepared)))
+        self.obs.metrics.counter("plan_cache.miss").inc()
         return PreparedQuery(self, entry, defaults, source)
 
     def _lowered_plan(self, entry: _PlanEntry, label: str,
                       batched: bool = False):
         """Lower the shape and wrap it so every XLA trace is counted in
         ``compile_events`` (jit executes the wrapper body only when it
-        traces, i.e. exactly once per compiled specialization)."""
+        traces, i.e. exactly once per compiled specialization); the same
+        wrapper feeds the ``plan.compile_events`` registry counter and an
+        ``xla.trace`` event, so re-trace regressions show up in
+        ``explain_analyze`` and ``--metrics``."""
         plan = lower(entry.shape, self.catalog, wire=self.wire,
-                     binding=entry.stats_binding, batched=batched)
+                     binding=entry.stats_binding, batched=batched,
+                     obs=self.obs)
+        entry.semijoins = tuple(getattr(plan, "semijoins", ()))
         events = self.compile_events
+        obs = self.obs
+        drv = self
+
+        def on_trace():
+            if drv._profiling:
+                return
+            events.append(label)
+            obs.metrics.counter("plan.compile_events").inc()
+            obs.event("xla.trace", cat="plan", label=label)
+
         if plan.params:
             def wrapped(ctx, t, pvals):
-                events.append(label)
+                on_trace()
                 return plan(ctx, t, pvals)
         else:
             def wrapped(ctx, t):
-                events.append(label)
+                on_trace()
                 return plan(ctx, t)
         wrapped.params = plan.params
         return wrapped
@@ -379,16 +445,18 @@ class TPCHDriver:
     def _ensure_compiled(self, entry: _PlanEntry):
         if entry.fn is None:
             label = entry.shape.name or "<lowered-ir>"
-            entry.fn = self.cluster.compile(
-                self._lowered_plan(entry, label), self.ctx, self.placed)
+            with self.obs.span("lower", cat="plan", label=label):
+                entry.fn = self.cluster.compile(
+                    self._lowered_plan(entry, label), self.ctx, self.placed)
         return entry.fn
 
     def _ensure_batched(self, entry: _PlanEntry):
         if entry.batched_fn is None:
             label = f"{entry.shape.name or '<lowered-ir>'}@batch"
-            entry.batched_fn = self.cluster.compile(
-                self._lowered_plan(entry, label, batched=True),
-                self.ctx, self.placed, batch=True)
+            with self.obs.span("lower", cat="plan", label=label):
+                entry.batched_fn = self.cluster.compile(
+                    self._lowered_plan(entry, label, batched=True),
+                    self.ctx, self.placed, batch=True)
         return entry.batched_fn
 
     def compile_query(self, q: Query):
@@ -427,10 +495,12 @@ class TPCHDriver:
 
             specs = tpch_cubes.default_specs()
         for spec in specs:
-            self.cubes[spec.name] = build_cube(
-                self.cluster, self.ctx, self.placed, spec
-            )
-        self.router = CubeRouter(list(self.cubes.values()))
+            with self.obs.span("cube.build", cat="plan", cube=spec.name):
+                self.cubes[spec.name] = build_cube(
+                    self.cluster, self.ctx, self.placed, spec
+                )
+        self.obs.metrics.gauge("router.cubes").set(len(self.cubes))
+        self.router = CubeRouter(list(self.cubes.values()), obs=self.obs)
         return self.cubes
 
     def query(self, q, params=None) -> QueryAnswer:
@@ -458,6 +528,124 @@ class TPCHDriver:
                 f"name), got {type(q)}"
             )
         return self.prepare(q).execute(params)
+
+    # -- EXPLAIN / EXPLAIN ANALYZE (repro.obs) ------------------------------
+    def _explain(self, q, params=None):
+        """Shared front half: prepare, route-match, predicted plan rows."""
+        prep = self.prepare(q)
+        entry = prep.entry
+        binding = dict(prep.defaults)
+        if params:
+            binding.update(params)
+        match = None
+        if self.router is not None:
+            if entry.route[0] is not self.router:
+                entry.route = (self.router,
+                               self.router.route_query(entry.shape))
+            match = entry.route[1]
+        tier = 1 if match is not None else 2
+        source = (match.route.cube.spec.name if match is not None
+                  else prep.source)
+        rows, sjs, err = [], [], None
+        try:
+            rows = explain_chain(entry.shape, self.catalog, wire=self.wire,
+                                 binding=binding)
+        except (LoweringError, QueryError) as e:
+            err = str(e)
+        for r in rows:
+            if r["op"] != "SemiJoin":
+                continue
+            wf = r["wire"]
+            kind = "packed" if (self.wire == "packed" and wf.packed) else "raw"
+            sjs.append(SemiJoinInfo(
+                index=len(sjs), table=r["table"], alt=r["alt"],
+                capacity=r["capacity"], capacity_key=r["capacity_key"],
+                wire_kind=kind, key_bits=wf.key_bits, gamma=r["gamma"],
+            ))
+        report = ExplainReport(
+            query=prep.source, route_tier=tier, route_source=source,
+            cache="hit" if prep.cache_hit else "miss", params=binding,
+            plan_rows=rows, semijoins=sjs, plan_error=err,
+        )
+        return report, prep
+
+    def explain(self, q, params=None) -> ExplainReport:
+        """Static EXPLAIN: the route the query WOULD take (Tier-1 cube
+        match vs Tier-2 compiled plan), plan-cache state, and the cost
+        model's per-operator predictions — nothing is compiled or run."""
+        report, _ = self._explain(q, params)
+        return report
+
+    def explain_analyze(self, q, params=None) -> ExplainReport:
+        """EXPLAIN plus one traced execution: observed tier, compile vs
+        execute milliseconds (the query runs cold, and again warm when the
+        first run traced, so the difference isolates XLA compilation),
+        per-execution overflow, registry counters, and — for Tier-2 runs —
+        per-collective HLO bytes attributed to the plan's request
+        semi-joins in program order."""
+        report, prep = self._explain(q, params)
+        entry = prep.entry
+        mreg = self.obs.metrics
+        ev0 = len(self.compile_events)
+        t0 = time.perf_counter()
+        ans = prep.execute(params)
+        cold_s = time.perf_counter() - t0
+        traces = len(self.compile_events) - ev0
+        observed = {
+            "tier": ans.tier,
+            "source": ans.source,
+            "overflow": bool(np.asarray(ans.overflow).any()),
+        }
+        if traces:
+            t0 = time.perf_counter()
+            ans = prep.execute(params)
+            warm_s = time.perf_counter() - t0
+            observed["compile_ms"] = max(cold_s - warm_s, 0.0) * 1e3
+            observed["xla_traces"] = traces
+            observed["execute_ms"] = warm_s * 1e3
+        else:
+            observed["compile_ms"] = None
+            observed["xla_traces"] = 0
+            observed["execute_ms"] = cold_s * 1e3
+        # registry counters BEFORE the profiling compile below, so the
+        # report reflects what the measured runs did
+        observed["overflow_count"] = mreg.value("exchange.overflow")
+        observed["compile_events"] = mreg.value("plan.compile_events")
+        if ans.tier == 2 and report.plan_error is None:
+            try:
+                prof = self._collective_profile(entry)
+            except Exception as e:
+                prof, observed["profile_error"] = None, str(e)
+            if prof is not None:
+                observed["collective_bytes_by_op"] = dict(prof.bytes_by_op)
+                observed["collective_count_by_op"] = dict(prof.count_by_op)
+                attribute_semijoin_bytes(prof.instructions, report.semijoins)
+        report.observed = observed
+        return report
+
+    def _collective_profile(self, entry: _PlanEntry):
+        """HLO collective stats of the compiled scalar plan, cached per
+        entry.  Lazy on purpose: ``jit(...).lower().compile()`` is a second
+        XLA compilation that plain query execution must never pay — only
+        ``explain_analyze`` materializes it."""
+        if entry.profile is None:
+            from repro.launch.roofline import parse_collective_bytes
+
+            fn = self._ensure_compiled(entry)
+            cols = self._columns()
+            self._profiling = True
+            try:
+                if entry.params:
+                    pvals = {p.name: jax.ShapeDtypeStruct(
+                        (), np.dtype(p.dtype)) for p in entry.params}
+                    lowered = fn.lower(cols, pvals)
+                else:
+                    lowered = fn.lower(cols)
+                entry.profile = parse_collective_bytes(
+                    lowered.compile().as_text())
+            finally:
+                self._profiling = False
+        return entry.profile
 
     def oracle(self, name: str, **kw):
         """Float64 numpy reference via the registry's EXPLICIT oracle

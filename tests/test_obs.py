@@ -1,0 +1,304 @@
+"""Observability layer: metrics registry math, structured traces, and
+EXPLAIN ANALYZE.
+
+- histogram percentiles on fixed distributions with known quantiles (the
+  log-bucket scheme guarantees ~2.2% relative error),
+- span nesting + Chrome-trace export round-trip (valid trace-event JSON
+  with complete/instant phases — the shape Perfetto loads), and a sample
+  trace artifact written for CI,
+- ``explain_analyze`` golden checks on q6 (predicted plan fields next to
+  observed timings/counters) and on a Tier-1 cube-served query,
+- per-semijoin all-to-all attribution against synthetic instruction
+  streams,
+- routing/caching/overflow counters emitted by the driver paths, and the
+  serving-layer trimmed-median/p99 statistics.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.launch.roofline import CollectiveInstr
+from repro.obs import (
+    Histogram,
+    MetricsRegistry,
+    Observer,
+    SemiJoinInfo,
+    attribute_semijoin_bytes,
+)
+from repro.query import Q, C
+
+pytestmark = pytest.mark.tier1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_percentiles_uniform():
+    h = Histogram("t")
+    for v in range(1, 1001):  # uniform 1..1000
+        h.record(float(v))
+    assert h.count == 1000
+    # log-bucketing guarantees ~2.2% relative error; allow 5% headroom
+    assert h.quantile(0.50) == pytest.approx(500, rel=0.05)
+    assert h.quantile(0.95) == pytest.approx(950, rel=0.05)
+    assert h.quantile(0.99) == pytest.approx(990, rel=0.05)
+    assert h.quantile(0.0) == pytest.approx(1, rel=0.05)
+    assert h.quantile(1.0) == 1000  # clamped to observed max
+
+
+def test_histogram_bimodal_and_zeros():
+    h = Histogram("t")
+    for _ in range(50):
+        h.record(1.0)
+    for _ in range(50):
+        h.record(1000.0)
+    assert h.quantile(0.25) == pytest.approx(1.0, rel=0.05)
+    assert h.quantile(0.75) == pytest.approx(1000.0, rel=0.05)
+    z = Histogram("z")
+    for _ in range(90):
+        z.record(0.0)
+    for _ in range(10):
+        z.record(100.0)
+    assert z.quantile(0.5) == 0.0
+    assert z.quantile(0.95) == pytest.approx(100.0, rel=0.05)
+    s = z.snapshot()
+    assert s["count"] == 100 and s["max"] == 100.0
+
+
+def test_registry_counters_gauges_and_report():
+    reg = MetricsRegistry()
+    reg.counter("a.hits").inc()
+    reg.counter("a.hits").inc(4)
+    reg.gauge("a.size").set(7)
+    reg.histogram("a.lat").record(3.0)
+    assert reg.value("a.hits") == 5
+    assert reg.value("never.touched") == 0
+    snap = reg.snapshot()
+    assert snap["a.hits"] == 5 and snap["a.size"] == 7.0
+    assert snap["a.lat"]["count"] == 1
+    report = reg.report()
+    assert "a.hits" in report and "p99" in report
+    with pytest.raises(TypeError):
+        reg.gauge("a.hits")  # type collision is a bug, not a silent rebind
+
+
+# ---------------------------------------------------------------------------
+# trace layer
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_chrome_export_roundtrip(tmp_path):
+    obs = Observer()
+    with obs.span("query", source="qX") as sp:
+        sp.set(tier=2)
+        with obs.span("route", cat="route"):
+            pass
+        obs.event("xla.trace", cat="plan", label="qX")
+    roots = list(obs.spans)
+    assert len(roots) == 1
+    root = roots[0]
+    assert [c.name for c in root.children] == ["route", "xla.trace"]
+    assert root.attrs["tier"] == 2
+    assert root.dur >= root.children[0].dur >= 0
+
+    path = obs.save_chrome_trace(str(tmp_path / "trace.json"))
+    doc = json.loads(open(path).read())  # round-trip through disk
+    events = doc["traceEvents"]
+    assert {e["name"] for e in events} == {"query", "route", "xla.trace"}
+    for e in events:
+        assert e["ph"] in ("X", "i")
+        assert isinstance(e["ts"], float) and "pid" in e and "tid" in e
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    q = next(e for e in events if e["name"] == "query")
+    r = next(e for e in events if e["name"] == "route")
+    assert q["ts"] <= r["ts"] <= q["ts"] + q["dur"]  # child inside parent
+    assert q["args"]["tier"] == 2
+
+
+def test_disabled_observer_swallows_spans_keeps_metrics():
+    obs = Observer(enabled=False)
+    with obs.span("query") as sp:
+        sp.set(tier=1)
+        obs.event("nested")
+    assert len(obs.spans) == 0
+    obs.metrics.counter("still.live").inc()
+    assert obs.metrics.value("still.live") == 1
+
+
+def test_span_records_exception():
+    obs = Observer()
+    with pytest.raises(ValueError):
+        with obs.span("boom"):
+            raise ValueError("no")
+    assert "ValueError" in obs.last("boom").attrs["error"]
+
+
+# ---------------------------------------------------------------------------
+# per-semijoin byte attribution
+# ---------------------------------------------------------------------------
+
+
+def _sj(alt, wire_kind="packed", index=0):
+    return SemiJoinInfo(index=index, table="part", alt=alt, capacity=256,
+                        capacity_key="sj", wire_kind=wire_kind, key_bits=11,
+                        gamma=0.1)
+
+
+def _a2a(n, nbytes=100):
+    return [CollectiveInstr(name=f"a2a.{i}", kind="all-to-all", bytes=nbytes)
+            for i in range(n)]
+
+
+def test_attribution_packed_and_raw_chunks():
+    sjs = [_sj("request", "packed", 0), _sj("bitset", index=1),
+           _sj("request", "raw", 2)]
+    instrs = ([CollectiveInstr("ar", "all-reduce", 999)]  # non-a2a: ignored
+              + _a2a(5))
+    assert attribute_semijoin_bytes(instrs, sjs)
+    assert sjs[0].a2a_bytes == 200 and sjs[0].a2a_count == 2
+    assert sjs[1].a2a_bytes is None  # bitset semi-join owns no all-to-all
+    assert sjs[2].a2a_bytes == 300 and sjs[2].a2a_count == 3
+
+
+def test_attribution_refuses_count_mismatch():
+    sjs = [_sj("request", "packed")]
+    assert not attribute_semijoin_bytes(_a2a(3), sjs)  # packed expects 2
+    assert sjs[0].a2a_bytes is None  # untouched — totals-only fallback
+
+
+# ---------------------------------------------------------------------------
+# serving statistics
+# ---------------------------------------------------------------------------
+
+
+def test_trimmed_median_and_p99():
+    from repro.cube.serving import _p99, _trimmed_median
+
+    # an outlier that min-of-N would hide and a mean would absorb
+    xs = [1.0] * 9 + [100.0]
+    assert _trimmed_median(xs) == 1.0
+    assert _p99(xs) == 100.0
+    assert _trimmed_median([3.0, 1.0, 2.0]) == 2.0  # n<5: no trim
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN / EXPLAIN ANALYZE against the real driver
+# ---------------------------------------------------------------------------
+
+
+def test_explain_is_static(tpch_driver):
+    ev0 = len(tpch_driver.compile_events)
+    rep = tpch_driver.explain("q6")
+    assert not rep.analyzed
+    assert len(tpch_driver.compile_events) == ev0  # nothing compiled
+    text = rep.text()
+    assert text.startswith("EXPLAIN q6")
+    assert "Scan[lineitem" in text and "Filter[" in text
+    assert "parameters:" in text
+
+
+def test_explain_analyze_q6_golden(tpch_driver):
+    rep = tpch_driver.explain_analyze("q6")
+    assert rep.analyzed
+    obs = rep.observed
+    # predicted side: plan rows with selectivities, auto-extracted params
+    assert [r["op"] for r in rep.plan_rows] == ["Scan", "Filter", "GroupAgg"]
+    assert 0.0 < rep.plan_rows[1]["sel"] <= 1.0
+    assert rep.params and all(k.startswith("_p") for k in rep.params)
+    assert rep.cache in ("hit", "miss")
+    # observed side: tier, timings, counters
+    assert obs["tier"] == 2 and obs["source"] == "q6"
+    assert obs["execute_ms"] > 0.0
+    assert (obs["compile_ms"] is not None) == (obs["xla_traces"] > 0)
+    assert obs["overflow"] is False
+    assert "overflow_count" in obs and "compile_events" in obs
+    # tier-2 plans carry the HLO collective profile
+    assert obs["collective_bytes_by_op"]
+    text = rep.text()
+    assert "EXPLAIN ANALYZE q6" in text
+    assert "route: tier 2" in text
+    assert "timings:" in text and "collectives/device:" in text
+    assert "exchange.overflow=" in text and "plan.compile_events=" in text
+
+
+def test_explain_analyze_fresh_shape_reports_compile_time(tpch_driver):
+    # a shape no other test prepares: the first execution must trace, so
+    # compile vs execute time separate
+    q = (Q.scan("lineitem")
+         .filter((C("l_quantity") < 7.0) & (C("l_tax") >= 0.0)
+                 & (C("l_discount") > 0.001))
+         .group_agg(keys=(), aggs=[("obs_rev", "sum",
+                                    C("l_extendedprice") * C("l_discount"))])
+         .named("obs_fresh"))
+    rep = tpch_driver.explain_analyze(q)
+    obs = rep.observed
+    assert obs["xla_traces"] >= 1
+    assert obs["compile_ms"] is not None and obs["compile_ms"] >= 0.0
+    assert obs["execute_ms"] > 0.0
+    assert "XLA trace" in rep.text()
+
+
+def test_explain_analyze_all_ir_queries(tpch_driver):
+    """Acceptance sweep: every registered IR query explains with route
+    tier, cache state, timings, and (tier 2) per-op collective bytes."""
+    for name in ("q1", "q4", "q6", "q14_promo", "q18"):
+        rep = tpch_driver.explain_analyze(name)
+        assert rep.analyzed, name
+        obs = rep.observed
+        assert obs["tier"] in (1, 2), name
+        assert obs["execute_ms"] > 0.0, name
+        assert rep.plan_rows, name
+        if obs["tier"] == 2:
+            assert obs["collective_bytes_by_op"], name
+        text = rep.text()
+        assert f"EXPLAIN ANALYZE {name}" in text
+        assert "plan cache" in text
+
+
+def test_explain_analyze_tier1_route(tpch_driver):
+    if tpch_driver.router is None:
+        tpch_driver.build_cubes()
+    rep = tpch_driver.explain_analyze("q1")
+    assert rep.observed["tier"] == 1
+    assert rep.observed["compile_ms"] is None  # cube slice, nothing compiled
+    assert "rollup cube" in rep.text()
+
+
+def test_driver_counters_and_spans(tpch_driver):
+    d = tpch_driver
+    if d.router is None:
+        d.build_cubes()
+    m = d.obs.metrics
+    t1, t2 = m.value("driver.tier1"), m.value("driver.tier2")
+    hits = m.value("plan_cache.hit")
+    d.query("q1")   # cube-served
+    d.query("q6")   # compiled plan
+    d.query("q6")   # same shape again -> structural cache hit
+    assert m.value("driver.tier1") == t1 + 1
+    assert m.value("driver.tier2") == t2 + 2
+    assert m.value("plan_cache.hit") >= hits + 1
+    assert m.value("router.match") >= 1
+    # spans: the last tier-2 query recorded a query->route(+execute) tree
+    span = d.obs.last("query")
+    assert span is not None and span.attrs["tier"] == 2
+    assert span.find("route")
+    # latency histograms feed the p99 gates
+    assert m.histogram("query.tier2_us").count >= 2
+
+
+def test_sample_trace_artifact(tpch_driver):
+    """Write the CI trace artifact (uploaded by the workflow) and check it
+    is a loadable Chrome trace with driver spans in it."""
+    tpch_driver.query("q6")
+    path = tpch_driver.obs.save_chrome_trace(
+        "experiments/trace/sample_trace.json")
+    doc = json.loads(open(path).read())
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "query" in names and "route" in names
+    assert all(set(e) >= {"name", "ph", "ts", "pid", "tid"}
+               for e in doc["traceEvents"])
