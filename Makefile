@@ -5,13 +5,28 @@
 
 PYTEST ?= python -m pytest
 
-.PHONY: test test-fast bench-cubes bench-smoke
+.PHONY: test test-fast lint lint-plans bench-cubes bench-smoke
 
 test:
 	$(PYTEST) -q
 
 test-fast:
 	$(PYTEST) -q -m tier1 --durations=15
+
+# static plan verification: every registry IR query, parameterized TPC-H
+# form, and cube serving preset must verify clean (rule catalog:
+# docs/RULES.md).  CI gates on this; errors AND warnings fail, infos pass.
+lint-plans:
+	PYTHONPATH=src python -m repro.launch.serve_olap --lint --sf 0.01
+
+# ruff is a dev-only extra (requirements-dev.txt); skip gracefully where
+# it isn't installed so `make lint` works in the minimal container too
+lint: lint-plans
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src/repro/query src/repro/core; \
+	else \
+		echo "ruff not installed; skipping style lint (pip install -r requirements-dev.txt)"; \
+	fi
 
 bench-cubes:
 	PYTHONPATH=src python -m benchmarks.cube_speedup --sf 0.05

@@ -15,6 +15,7 @@
 | lowered-IR overhead     | (ours)    | benchmarks.ir_overhead      |
 | exchange wire formats   | §3.2.1    | benchmarks.exchange_compression |
 | prepared-plan throughput| §2, §3.1  | benchmarks.param_throughput |
+| plan-verifier latency   | (ours)    | benchmarks.verify_bench     |
 
 Every section persists machine-readable JSON under ``experiments/bench/``
 (via ``benchmarks.common.emit``) alongside the printed markdown table.
@@ -43,7 +44,7 @@ def main(argv=None):
                             exchange_compression, ir_overhead,
                             param_throughput, power_test, q15_topk,
                             roofline_report, sampling_bench, semijoin_cost,
-                            weak_scaling)
+                            verify_bench, weak_scaling)
 
     sections = {
         "cube_speedup": lambda: cube_speedup.run(
@@ -56,6 +57,8 @@ def main(argv=None):
             repeat=5 if args.quick else 30),
         "param_throughput": lambda: param_throughput.run(
             sf=0.02, repeat=3 if args.quick else 8),
+        "verify_bench": lambda: verify_bench.run(
+            sf=0.02, repeat=3 if args.quick else 10),
         "weak_scaling": lambda: weak_scaling.run(repeat=2 if args.quick else 3),
         "q15_topk": lambda: (q15_topk.run(sf=0.01 if args.quick else 0.02),
                              q15_topk.sweep_m(sf=0.01 if args.quick else 0.02)),

@@ -1,0 +1,60 @@
+"""Static-verifier latency: how long does ``TPCHDriver.check`` take per
+registry query?  The verifier sits on the prepare path (EXPLAIN renders
+its diagnostics, ``--lint`` gates CI on it), so it must stay cheap
+relative to an XLA compile — this reports per-query wall time plus the
+diagnostic counts so a rule that suddenly explodes in cost shows up.
+
+  PYTHONPATH=src python -m benchmarks.verify_bench --sf 0.02
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def run(sf: float = 0.02, repeat: int = 5):
+    from benchmarks.common import emit
+    from repro.core.plans import REGISTRY
+    from repro.tpch import queries as tq
+    from repro.tpch.driver import TPCHDriver
+
+    d = TPCHDriver(sf=sf, seed=0)
+    targets = [(name, qd.ir) for name, qd in REGISTRY.items()
+               if qd.ir is not None]
+    targets += [(f"{name}_param", make()) for name, make
+                in tq.PARAM_QUERIES.items()]
+
+    rows = []
+    for name, q in targets:
+        rep = d.check(q)  # warm the prepare cache
+        times = []
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            rep = d.check(q)
+            times.append(time.perf_counter() - t0)
+        rows.append({
+            "query": name,
+            "verify_ms": min(times) * 1e3,
+            "errors": len(rep.errors),
+            "warnings": len(rep.warnings),
+            "infos": len(rep.infos),
+        })
+    emit("verify_bench", rows,
+         ["query", "verify_ms", "errors", "warnings", "infos"])
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--sf", type=float, default=0.02)
+    p.add_argument("--repeat", type=int, default=5)
+    args = p.parse_args(argv)
+    run(sf=args.sf, repeat=args.repeat)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,12 +10,10 @@ in §2), so a compiled plan is one SPMD executable, exactly the paper's model.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Mapping
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.columnar import Table, shard_table

@@ -57,7 +57,6 @@ All functions here are called INSIDE shard_map; arrays are per-device views.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Optional
 
 import jax

@@ -8,7 +8,6 @@ one SPMD executable (the paper's precompiled C++ function).
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core.engine import PlanContext
 from repro.tpch.schema import DEFAULT_PARAMS  # noqa: F401  (re-export)

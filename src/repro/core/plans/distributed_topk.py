@@ -4,9 +4,8 @@ exchange.  Q15 is the paper's showcase for the §3.2.5 approximate top-k."""
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core import aggregation, exchange, late_materialization, semijoin, topk
+from repro.core import exchange, late_materialization, semijoin, topk
 from repro.core.topk_approx import approx_topk_distributed, simple_topk_distributed
 from repro.core.plans.common import (
     DEFAULT_PARAMS as DP,

@@ -24,6 +24,39 @@ import time
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 
+def _lint(d) -> int:
+    """--lint: statically verify every registry IR query, parameterized
+    TPC-H form, and cube serving preset against the generated catalog
+    (``repro.query.verify``); nothing is compiled or executed.  Exit
+    nonzero on any error or warning — info advisories are allowed (CI
+    gates on this)."""
+    from repro.core.plans import REGISTRY
+    from repro.query.ir import QueryError
+    from repro.tpch import queries as tq
+
+    targets = [(name, qd.ir) for name, qd in REGISTRY.items()
+               if qd.ir is not None]
+    targets += [(f"{name}_param", make()) for name, make
+                in tq.PARAM_QUERIES.items()]
+    targets += [(name, make()) for name, make in tq.SERVING_QUERIES.items()]
+    failed = 0
+    for label, q in targets:
+        try:
+            rep = d.check(q)
+        except QueryError as e:
+            print(f"{label:>22s}  ERROR  verify failed: {e}")
+            failed += 1
+            continue
+        status = "clean" if rep.clean else ("WARN" if rep.ok else "FAIL")
+        print(f"{label:>22s}  {status}")
+        for x in rep.diagnostics:
+            print(f"{'':>24s}{x.format()}")
+        if not rep.clean:
+            failed += 1
+    print(f"\n{len(targets)} plans verified, {failed} with errors/warnings")
+    return 1 if failed else 0
+
+
 def _serve_cubes(d, repeat: int):
     from repro.cube.serving import measure_query
     from repro.tpch import cubes as tpch_cubes
@@ -58,6 +91,10 @@ def main(argv=None):
     p.add_argument("--repeat", type=int, default=3)
     p.add_argument("--backend", choices=["xla", "one_factor"], default="xla")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--lint", action="store_true",
+                   help="statically verify every registry IR query + cube "
+                        "serving preset (repro.query.verify rule catalog: "
+                        "docs/RULES.md); exit nonzero on errors/warnings")
     p.add_argument("--cubes", action="store_true",
                    help="two-tier mode: build rollup cubes, report tier-1 vs "
                         "tier-2 latency per serving query")
@@ -76,6 +113,10 @@ def main(argv=None):
 
     d = TPCHDriver(sf=args.sf, seed=args.seed, backend=args.backend)
     try:
+        if args.lint:
+            print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
+                  f"static plan verify")
+            return _lint(d)
         if args.cubes:
             print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
                   f"two-tier serving")

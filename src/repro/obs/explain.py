@@ -123,6 +123,9 @@ class ExplainReport:
     semijoins: list = dataclasses.field(default_factory=list)
     plan_error: Optional[str] = None   # unlowerable Tier-2 form
     observed: Optional[dict] = None
+    # static-verifier findings (repro.query.verify Diagnostic objects),
+    # most-severe first; empty for a clean plan
+    diagnostics: list = dataclasses.field(default_factory=list)
 
     @property
     def analyzed(self) -> bool:
@@ -185,6 +188,9 @@ class ExplainReport:
             lines.append("plan (cost-model predictions"
                          + (" | observed bytes):" if self.analyzed else "):"))
             lines.extend("  " + l for l in self._plan_lines())
+        if self.diagnostics:
+            lines.append("diagnostics:")
+            lines.extend("  " + d.format() for d in self.diagnostics)
         if obs:
             if obs.get("compile_ms") is not None:
                 lines.append(

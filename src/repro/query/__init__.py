@@ -51,5 +51,11 @@ from repro.query.ir import (  # noqa: F401
     substitute,
     validate,
 )
-from repro.query.lower import explain_chain, lower  # noqa: F401
+from repro.query.lower import (  # noqa: F401
+    decide_semijoins,
+    explain_chain,
+    lower,
+)
 from repro.query.params import bind_params, parameterize  # noqa: F401
+# the static plan verifier lives in the repro.query.verify subpackage
+# (imported lazily by TPCHDriver.check / explain to keep import cost low)

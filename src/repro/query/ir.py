@@ -25,7 +25,7 @@ always parenthesize comparisons inside conjunctions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Mapping, Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 

@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import jax.numpy as jnp
 from jax import lax
@@ -47,7 +46,6 @@ from repro.core.compression import choose_semijoin_wire
 from repro.core.exchange import WireFormat
 from repro.query import stats as qstats
 from repro.query.ir import (
-    Agg,
     Bin,
     BinOp,
     Catalog,
@@ -99,6 +97,10 @@ class _SemiJoinPlan:
     wire: WireFormat = WireFormat.raw()  # packed format of the exchange
     table: str = ""    # semi-join target table (observability/EXPLAIN)
     gamma: float = 0.0  # predicted target-predicate selectivity
+    # model capacity regardless of the chosen alternative — what the
+    # request exchange WOULD need under this binding (the static verifier
+    # compares it against the compiled capacity for other bindings)
+    derived_capacity: int = 0
 
 
 def _decide_semijoins(root, catalog: Catalog, query_name=None,
@@ -169,9 +171,16 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None,
                 alt=alt, capacity=cap if alt == "request" else 0,
                 key=f"{query_name or 'query'}_sj{len(decisions)}",
                 wire=wf, table=node.table, gamma=gamma,
+                derived_capacity=cap,
             )
             sel *= gamma
     return decisions
+
+
+# stable public entry point for the static verifier (repro.query.verify):
+# the same decision pass the lowering runs, usable without lowering
+decide_semijoins = _decide_semijoins
+SemiJoinPlan = _SemiJoinPlan
 
 
 def explain_chain(query: Query, catalog: Catalog, *, wire: str = "packed",

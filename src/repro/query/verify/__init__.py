@@ -1,0 +1,51 @@
+"""Static plan verifier: prove SPMD/capacity/recompilation/numeric
+properties of a query plan BEFORE it reaches the cluster.
+
+The paper's precompiled-plan model fixes every correctness property of a
+query at plan time — which collectives run on every shard, how big the
+exchange buffers are, which literals force a fresh compile.  This package
+checks those properties from the IR tree + catalog statistics (plus
+optional lowering artifacts) without executing anything, the way a race
+detector proves properties of threaded code:
+
+>>> from repro.query.verify import verify
+>>> report = verify(q, catalog)          # or: TPCHDriver.check(q)
+>>> report.ok, report.clean
+(True, True)
+>>> print(report.text())
+VERIFY q14_promo: clean
+
+Rules have stable IDs (``docs/RULES.md``) and severities:
+
+- ``SPMD001-004`` — collective-consistency (divergent sequences,
+  data-dependent guards/loops, HLO count cross-check)
+- ``CAP001`` — capacity soundness under worst-case declared bindings
+- ``PRM001`` — bindings outside declared ``Param`` ranges
+- ``RCP001-003`` — recompilation hazards ``query/params.py`` cannot
+  canonicalize
+- ``NUM001-004`` — numeric hazards (zero-crossing divisions, batched-GEMM
+  fallback, packed-wire key-domain overflow, non-integral keys)
+"""
+from repro.query.verify.collectives import (  # noqa: F401
+    CollectiveOp,
+    collective_script,
+    expected_all_to_alls,
+)
+from repro.query.verify.core import (  # noqa: F401
+    Diagnostic,
+    PlanArtifacts,
+    Rule,
+    RULES,
+    VerifyReport,
+)
+from repro.query.verify.hlo import (  # noqa: F401
+    ControlFlowCollective,
+    collectives_in_control_flow,
+)
+from repro.query.verify.rules import (  # noqa: F401
+    ANALYZERS,
+    VerifyContext,
+    interval,
+    verify,
+    worst_case_binding,
+)

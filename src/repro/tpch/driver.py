@@ -162,6 +162,16 @@ class PreparedQuery:
                 f"unknown parameter(s) {unknown} for prepared query "
                 f"{self.source!r} (parameters: {sorted(names)})"
             )
+        # eager castability: a bad value must fail HERE, naming the key,
+        # not as a bare ValueError deep inside tracing
+        for p in self.entry.params:
+            try:
+                np.asarray(b[p.name], np.dtype(p.dtype))
+            except (TypeError, ValueError) as e:
+                raise UnboundParamError(
+                    f"binding {p.name}={b[p.name]!r} for prepared query "
+                    f"{self.source!r} is not castable to {p.dtype}: {e}"
+                ) from None
         return b
 
     def _cast(self, b: dict) -> dict:
@@ -519,6 +529,13 @@ class TPCHDriver:
         if isinstance(q, str):
             entry = plan_registry.get(q)
             if entry.ir is None:
+                if params:
+                    raise UnboundParamError(
+                        f"{q!r} resolves to a hand-written physical plan "
+                        f"with no runtime parameters — binding(s) "
+                        f"{sorted(params)} cannot be applied; use an IR "
+                        f"form or drop params"
+                    )
                 value, overflow = _split_overflow(jax.device_get(self.run(q)))
                 return QueryAnswer(value, tier=2, source=q, overflow=overflow)
             q = entry.ir
@@ -528,6 +545,35 @@ class TPCHDriver:
                 f"name), got {type(q)}"
             )
         return self.prepare(q).execute(params)
+
+    # -- static verification (repro.query.verify) ---------------------------
+    def check(self, q, params=None):
+        """Statically verify a query (or registered IR name) against this
+        driver's catalog, wire format, and capacity overrides — nothing is
+        compiled or executed.  ``params`` optionally overrides the
+        prepared defaults, so a binding can be vetted BEFORE
+        ``prepare(q).execute(params)`` pays for it (an undersized exchange
+        shows up as a ``CAP001`` error naming the worst-case binding).
+        Returns a :class:`repro.query.verify.VerifyReport`; rule catalog
+        in ``docs/RULES.md``."""
+        from repro.query.verify import verify
+
+        prep = self.prepare(q)
+        if params:
+            names = {p.name for p in prep.params}
+            unknown = sorted(set(params) - names)
+            if unknown:
+                raise UnboundParamError(
+                    f"unknown parameter(s) {unknown} for query "
+                    f"{prep.source!r} (parameters: {sorted(names)})"
+                )
+        binding = dict(prep.defaults)
+        binding.update(params or {})
+        return verify(
+            prep.entry.shape, self.catalog, wire=self.wire,
+            binding=binding, stats_binding=prep.entry.stats_binding,
+            capacities=self.capacities,
+        )
 
     # -- EXPLAIN / EXPLAIN ANALYZE (repro.obs) ------------------------------
     def _explain(self, q, params=None):
@@ -562,10 +608,22 @@ class TPCHDriver:
                 capacity=r["capacity"], capacity_key=r["capacity_key"],
                 wire_kind=kind, key_bits=wf.key_bits, gamma=r["gamma"],
             ))
+        diagnostics = []
+        try:
+            from repro.query.verify import verify
+
+            diagnostics = list(verify(
+                entry.shape, self.catalog, wire=self.wire, binding=binding,
+                stats_binding=entry.stats_binding,
+                capacities=self.capacities,
+            ).diagnostics)
+        except QueryError:
+            pass  # plan_error already carries the lowering failure
         report = ExplainReport(
             query=prep.source, route_tier=tier, route_source=source,
             cache="hit" if prep.cache_hit else "miss", params=binding,
             plan_rows=rows, semijoins=sjs, plan_error=err,
+            diagnostics=diagnostics,
         )
         return report, prep
 

@@ -1,0 +1,1 @@
+"""Seeded test fixtures (deliberately broken plans for the verifier)."""

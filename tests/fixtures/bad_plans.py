@@ -1,0 +1,223 @@
+"""Deliberately broken plans, one per verifier rule.
+
+Each :class:`BadPlan` is a (query, catalog, verify-kwargs) triple built so
+that running ``repro.query.verify.verify`` on it fires EXACTLY its
+``expected_rule`` (plus, for non-info rules, nothing else at error/warn
+severity) — the seeded negative corpus ``tests/test_verify.py`` pins the
+stable rule IDs with.
+
+The catalogs are synthetic (a 64k-row ``fact`` table with an 8k-row
+``dim`` dimension), built directly from ``TableInfo``/``ColumnStats`` so
+each hazard is isolated: real TPC-H plans exercise the clean path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch.roofline import CollectiveInstr
+from repro.query.ir import Catalog, ColumnStats, Lit, Param, Q, TableInfo, C
+from repro.query.verify import CollectiveOp, PlanArtifacts
+
+
+@dataclasses.dataclass(frozen=True)
+class BadPlan:
+    name: str
+    expected_rule: str
+    query: object            # repro.query.ir.Query
+    catalog: Catalog
+    kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+def make_catalog(num_nodes: int = 8, fact_rows: int = 64000,
+                 dim_rows: int = 8000, fact_key_hi: float = None) -> Catalog:
+    """Synthetic star-schema catalog.  ``fact_key_hi`` widens the foreign
+    key's stats beyond the dimension's key space (the NUM003 hazard)."""
+    if fact_key_hi is None:
+        fact_key_hi = dim_rows - 1
+    fact_stats = {
+        "f_key": ColumnStats(0, float(fact_key_hi), dim_rows),
+        "f_fkey": ColumnStats(0.0, float(dim_rows - 1), 0),  # float key
+        "f_a": ColumnStats(0, 9999, 10000),
+        "f_x": ColumnStats(1, 100, 100),
+        "f_y": ColumnStats(-5, 5, 11),          # interval crosses zero
+        "f_g": ColumnStats(0, 3, 4),
+        # f_tag: string column, no stats (build_catalog skips non-numerics)
+    }
+    dim_stats = {
+        "d_key": ColumnStats(0, dim_rows - 1, dim_rows),
+        "d_flag": ColumnStats(0, 2, 3),
+    }
+    return Catalog(
+        tables={
+            "fact": TableInfo(name="fact", columns=tuple(fact_stats) + ("f_tag",),
+                              replicated=False, num_rows=fact_rows,
+                              stats=fact_stats),
+            "dim": TableInfo(name="dim", columns=tuple(dim_stats),
+                             replicated=False, num_rows=dim_rows,
+                             stats=dim_stats),
+        },
+        copartitioned={},
+        num_nodes=num_nodes,
+    )
+
+
+_CAT = make_catalog()
+
+_SUM_X = [("total", "sum", C("f_x"))]
+
+
+def _groupagg(q):
+    return q.group_agg(aggs=_SUM_X)
+
+
+def _request_semijoin(name: str):
+    """fact -> dim request semi-join (alt pinned; packed wire)."""
+    return (Q.scan("fact")
+            .semijoin("dim", key=C("f_key"), pred=C("d_flag") == 1,
+                      alt="request")
+            .group_agg(aggs=_SUM_X)
+            .named(name))
+
+
+def _a2a(count: int, **kw) -> CollectiveOp:
+    return CollectiveOp("all-to-all", count, "fact_sj0", **kw)
+
+
+BAD_PLANS = (
+    # -- SPMD: collective-consistency ----------------------------------------
+    BadPlan(
+        name="divergent_collectives",
+        expected_rule="SPMD001",
+        query=_groupagg(Q.scan("fact")).named("bad_divergent"),
+        catalog=_CAT,
+        kwargs=dict(artifacts=PlanArtifacts(shard_scripts={
+            0: (_a2a(2), CollectiveOp("all-reduce", 1, "group_agg")),
+            # shard 1 thinks the exchange is raw: 3 all-to-alls
+            1: (_a2a(3), CollectiveOp("all-reduce", 1, "group_agg")),
+        })),
+    ),
+    BadPlan(
+        name="guarded_collective",
+        expected_rule="SPMD002",
+        query=_groupagg(Q.scan("fact")).named("bad_guarded"),
+        catalog=_CAT,
+        kwargs=dict(artifacts=PlanArtifacts(shard_scripts={
+            0: (_a2a(2, guard="any(local_hits) (data-dependent)"),),
+            1: (_a2a(2, guard="any(local_hits) (data-dependent)"),),
+        })),
+    ),
+    BadPlan(
+        name="collective_in_loop",
+        expected_rule="SPMD003",
+        query=_groupagg(Q.scan("fact")).named("bad_loop"),
+        catalog=_CAT,
+        kwargs=dict(artifacts=PlanArtifacts(shard_scripts={
+            0: (_a2a(2, in_loop=True),),
+            1: (_a2a(2, in_loop=True),),
+        })),
+    ),
+    BadPlan(
+        name="hlo_count_mismatch",
+        expected_rule="SPMD004",
+        query=_request_semijoin("bad_count"),
+        catalog=_CAT,
+        # static model expects 2 packed all-to-alls; the "lowered" HLO
+        # shows only one
+        kwargs=dict(artifacts=PlanArtifacts(instructions=(
+            CollectiveInstr("all-to-all.1", "all-to-all", 4096),
+        ))),
+    ),
+    # -- CAP: capacity soundness ---------------------------------------------
+    BadPlan(
+        name="undersized_capacity",
+        expected_rule="CAP001",
+        query=_request_semijoin("bad_cap"),
+        catalog=_CAT,
+        # a context override pins the exchange buffer far below the
+        # model's worst-case requirement
+        kwargs=dict(capacities={"bad_cap_sj0": 64}),
+    ),
+    # -- PRM: binding vs declared range --------------------------------------
+    BadPlan(
+        name="off_range_param",
+        expected_rule="PRM001",
+        query=(Q.scan("fact")
+               .filter(C("f_a") <= Param("p_cut", "int32", lo=0, hi=1000))
+               .group_agg(aggs=_SUM_X)
+               .named("bad_range")),
+        catalog=_CAT,
+        kwargs=dict(binding={"p_cut": 5000}),
+    ),
+    # -- RCP: recompilation hazards ------------------------------------------
+    BadPlan(
+        name="string_literal_predicate",
+        expected_rule="RCP001",
+        query=(Q.scan("fact")
+               .filter(C("f_tag") == Lit("BRAND#12"))
+               .group_agg(aggs=_SUM_X)
+               .named("bad_string_lit")),
+        catalog=_CAT,
+    ),
+    BadPlan(
+        name="kernel_skips_parameterization",
+        expected_rule="RCP002",
+        query=(Q.scan("fact")
+               .filter(C("f_a") <= 905)
+               .group_agg(keys=[("g", C("f_g"), 4)], aggs=_SUM_X,
+                          method="kernel")
+               .named("bad_kernel")),
+        catalog=_CAT,
+    ),
+    BadPlan(
+        name="constant_comparison",
+        expected_rule="RCP003",
+        query=(Q.scan("fact")
+               .filter((Lit(1) < Lit(2)) & (C("f_a") <= 905))
+               .group_agg(aggs=_SUM_X)
+               .named("bad_const_cmp")),
+        catalog=_CAT,
+    ),
+    # -- NUM: numeric hazards ------------------------------------------------
+    BadPlan(
+        name="zero_crossing_division",
+        expected_rule="NUM001",
+        query=(Q.scan("fact")
+               .group_agg(aggs=[("ratio", "sum", C("f_x") / C("f_y"))])
+               .named("bad_div")),
+        catalog=_CAT,
+    ),
+    BadPlan(
+        name="division_disables_maskgemm",
+        expected_rule="NUM002",
+        query=(Q.scan("fact")
+               .group_agg(keys=[("g", C("f_g"), 4)],
+                          # denominator stats [1, 100]: NaN-safe, but the
+                          # division still forces the per-lane fallback
+                          aggs=[("ratio", "sum", C("f_x") / C("f_x"))])
+               .named("bad_gemm")),
+        catalog=_CAT,
+    ),
+    BadPlan(
+        name="key_exceeds_wire_domain",
+        expected_rule="NUM003",
+        query=_request_semijoin("bad_domain"),
+        catalog=make_catalog(fact_key_hi=8500),  # keys beyond dim's 8000
+    ),
+    BadPlan(
+        name="float_semijoin_key",
+        expected_rule="NUM004",
+        query=(Q.scan("fact")
+               .semijoin("dim", key=C("f_fkey"), pred=C("d_flag") == 1,
+                         alt="request")
+               .group_agg(aggs=_SUM_X)
+               .named("bad_float_key")),
+        catalog=_CAT,
+    ),
+)
+
+
+def by_name(name: str) -> BadPlan:
+    for case in BAD_PLANS:
+        if case.name == name:
+            return case
+    raise KeyError(name)

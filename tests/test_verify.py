@@ -1,0 +1,240 @@
+"""Static plan verifier: rule catalog, clean registry plans, the seeded
+bad-plan corpus, capacity diagnostics that reproduce at runtime, degenerate
+statistics, and eager parameter-binding validation."""
+from __future__ import annotations
+
+import pytest
+
+from fixtures.bad_plans import BAD_PLANS, make_catalog
+from repro.query import UnboundParamError
+from repro.query.ir import C, Param, Q
+from repro.query.verify import (
+    RULES,
+    collective_script,
+    collectives_in_control_flow,
+    verify,
+)
+from repro.tpch import queries as tq
+from repro.tpch.schema import day
+
+pytestmark = pytest.mark.tier1
+
+_SUM = [("total", "sum", C("f_x"))]
+
+
+# -- rule catalog ------------------------------------------------------------
+
+def test_rule_registry_is_sane():
+    assert len(RULES) >= 13
+    for rid, rule in RULES.items():
+        assert rule.id == rid
+        assert rule.severity in ("error", "warn", "info")
+        assert rule.title and rule.summary
+    # the stable public IDs the docs and fixtures pin
+    expected = {"SPMD001", "SPMD002", "SPMD003", "SPMD004", "CAP001",
+                "PRM001", "RCP001", "RCP002", "RCP003", "NUM001", "NUM002",
+                "NUM003", "NUM004"}
+    assert expected <= set(RULES)
+
+
+# -- every registry plan verifies clean --------------------------------------
+
+def test_registry_ir_queries_verify_clean(tpch_driver):
+    from repro.core.plans import REGISTRY
+
+    checked = 0
+    for name, qd in REGISTRY.items():
+        if qd.ir is None:
+            continue
+        rep = tpch_driver.check(qd.ir)
+        assert rep.clean, f"{name}: {rep.text()}"
+        checked += 1
+    assert checked >= 5  # q1, q1_kernel, q4, q6, q14_promo, q18, ...
+
+
+def test_param_and_serving_queries_verify_clean(tpch_driver):
+    targets = [make() for make in tq.PARAM_QUERIES.values()]
+    targets += [make() for make in tq.SERVING_QUERIES.values()]
+    assert targets
+    for q in targets:
+        rep = tpch_driver.check(q)
+        assert rep.clean, rep.text()
+
+
+# -- seeded bad-plan corpus: each fixture fires exactly its rule -------------
+
+@pytest.mark.parametrize("case", BAD_PLANS, ids=[c.name for c in BAD_PLANS])
+def test_bad_plan_fires_expected_rule(case):
+    rep = verify(case.query, case.catalog, **case.kwargs)
+    ids = rep.rule_ids()
+    assert case.expected_rule in ids, rep.text()
+    hard = {d.rule_id for d in rep.errors + rep.warnings}
+    if RULES[case.expected_rule].severity == "info":
+        # advisory-only fixtures stay clean and fire nothing else
+        assert rep.clean and ids == {case.expected_rule}, rep.text()
+    else:
+        assert hard == {case.expected_rule}, rep.text()
+
+
+def test_diagnostic_format_names_rule_and_site():
+    case = BAD_PLANS[0]
+    rep = verify(case.query, case.catalog, **case.kwargs)
+    d = rep.diagnostics[0]
+    line = d.format()
+    assert d.rule_id in line and d.severity in line
+    assert rep.query in rep.text()
+
+
+# -- CAP001 is sound: the reported witness binding overflows at runtime ------
+
+def test_capacity_diagnostic_reproduces_runtime_overflow(tpch_driver):
+    q = tq.q14_promo_ir(alt="request")
+    # defaults (one shipdate month) are clean ...
+    assert tpch_driver.check(q).clean
+    # ... the full 1992-1998 range is not: the derived capacity was sized
+    # for the prepared defaults
+    wide = {"_p0": day(1992, 1, 1), "_p1": day(1998, 12, 1)}
+    rep = tpch_driver.check(q, params=wide)
+    cap = [d for d in rep.errors if d.rule_id == "CAP001"]
+    assert cap, rep.text()
+    assert cap[0].data["required"] > cap[0].data["capacity"]
+    # executing with the diagnostic's own witness binding must overflow
+    prep = tpch_driver.prepare(q)
+    ans = prep.execute(cap[0].data["binding"])
+    assert ans.overflow, "CAP001 witness binding did not overflow at runtime"
+
+
+# -- degenerate statistics ---------------------------------------------------
+
+def test_zero_row_table_verifies_without_crashing():
+    cat = make_catalog(fact_rows=0, dim_rows=8)
+    q = (Q.scan("fact")
+         .semijoin("dim", key=C("f_key"), pred=C("d_flag") == 1,
+                   alt="request")
+         .group_agg(aggs=_SUM)
+         .named("zero_rows"))
+    rep = verify(q, cat)
+    assert rep.ok
+    script = collective_script(q, cat)
+    assert any(op.kind == "all-to-all" for op in script)
+
+
+@pytest.mark.parametrize("pred,label", [
+    (C("f_a") <= -1, "sel_zero"),       # below lo=0 -> selectivity 0.0
+    (C("f_a") <= 99999, "sel_one"),     # above hi=9999 -> selectivity 1.0
+])
+def test_selectivity_endpoints_verify_clean(pred, label):
+    cat = make_catalog()
+    q = (Q.scan("fact")
+         .filter(pred)
+         .semijoin("dim", key=C("f_key"), pred=C("d_flag") == 1,
+                   alt="request")
+         .group_agg(aggs=_SUM)
+         .named(label))
+    rep = verify(q, cat)
+    assert rep.ok, rep.text()
+
+
+def test_param_with_lo_equal_hi():
+    cat = make_catalog()
+    point = Param("p_point", "int32", lo=5, hi=5)
+    q = (Q.scan("fact")
+         .filter(C("f_a") <= point)
+         .group_agg(aggs=_SUM)
+         .named("point_param"))
+    assert verify(q, cat, binding={"p_point": 5}).clean
+    rep = verify(q, cat, binding={"p_point": 6})
+    assert {d.rule_id for d in rep.errors} == {"PRM001"}, rep.text()
+
+
+# -- eager binding validation (driver layer) ---------------------------------
+
+def test_unknown_binding_key_rejected_before_tracing(tpch_driver):
+    prep = tpch_driver.prepare("q6")
+    with pytest.raises(UnboundParamError, match="bogus"):
+        prep.binding({"bogus": 1})
+
+
+def test_missing_binding_key_rejected(tpch_driver):
+    prep = tpch_driver.prepare("q6")
+    name = prep.params[0].name
+    defaults = dict(prep.defaults)
+    prep.defaults.pop(name)
+    try:
+        with pytest.raises(UnboundParamError, match=name):
+            prep.binding()
+    finally:
+        prep.defaults = defaults
+
+
+def test_uncastable_binding_value_named(tpch_driver):
+    prep = tpch_driver.prepare("q6")
+    name = prep.params[0].name
+    with pytest.raises(UnboundParamError, match=name):
+        prep.binding({name: "not-a-number"})
+
+
+def test_params_on_hand_written_plan_rejected(tpch_driver):
+    with pytest.raises(UnboundParamError, match="q3"):
+        tpch_driver.query("q3", params={"cutoff": 1})
+
+
+def test_check_rejects_unknown_param_names(tpch_driver):
+    with pytest.raises(UnboundParamError, match="nope"):
+        tpch_driver.check(tq.q14_promo_ir(), params={"nope": 1})
+
+
+# -- explain renders diagnostics ---------------------------------------------
+
+def test_explain_renders_verifier_diagnostics(tpch_driver):
+    wide = {"_p0": day(1992, 1, 1), "_p1": day(1998, 12, 1)}
+    txt = tpch_driver.explain(tq.q14_promo_ir(alt="request"),
+                              params=wide).text()
+    assert "diagnostics:" in txt and "CAP001" in txt
+
+
+def test_explain_clean_plan_has_no_diagnostics_section(tpch_driver):
+    txt = tpch_driver.explain("q6").text()
+    assert "diagnostics:" not in txt
+
+
+# -- HLO control-flow scanner ------------------------------------------------
+
+_HLO_WHILE = """
+HloModule m
+
+%body (p: s32[8]) -> s32[8] {
+  %p = s32[8] parameter(0)
+  ROOT %ar = s32[8] all-reduce(%p), to_apply=%add
+}
+
+%cond (p: s32[8]) -> pred[] {
+  %p = s32[8] parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (x: s32[8]) -> s32[8] {
+  %x = s32[8] parameter(0)
+  ROOT %w = s32[8] while(%x), condition=%cond, body=%body
+}
+"""
+
+_HLO_STRAIGHT = """
+HloModule m
+
+ENTRY %main (x: s32[8]) -> s32[8] {
+  %x = s32[8] parameter(0)
+  ROOT %ar = s32[8] all-reduce(%x), to_apply=%add
+}
+"""
+
+
+def test_hlo_scanner_flags_collective_in_while_body():
+    hits = collectives_in_control_flow(_HLO_WHILE)
+    assert hits, "all-reduce inside while body not detected"
+    assert any(k == "all-reduce" for h in hits for k, _ in h.kinds)
+    assert all(h.region in ("while", "conditional") for h in hits)
+
+
+def test_hlo_scanner_ignores_straight_line_collectives():
+    assert not collectives_in_control_flow(_HLO_STRAIGHT)
