@@ -168,21 +168,32 @@ def bitset_words(n: int) -> int:
     return (max(n, 0) + 31) // 32
 
 
+# The EF high parts live in a BOUNDED universe: the split always leaves at
+# most EF_UNIVERSE distinct high values, so a decoder can reconstruct every
+# high part from a fixed EF_UNIVERSE-1 zero-rank queries over the upper
+# bitvector — static shape AND constant query count, no per-bit rank pass.
+EF_UNIVERSE = 16
+
+
 def ef_params(capacity: int, domain: int) -> tuple:
     """Elias–Fano split for ``capacity`` SORTED keys drawn from a
     per-destination domain of ``domain`` values: returns
     ``(l, upper_words, lower_words)``.
 
-    Each key splits into ``l = max(0, floor(log2(domain / capacity)))``
-    low bits (fixed-width packed — the "catalog-derived width" part) and a
-    high part encoded in unary in a bitvector of ``capacity +
-    ceil(domain / 2^l)`` bits (the delta part: ~2 bits/key regardless of
-    the domain).  Static shapes by construction — valid for ANY sorted
-    bucket content, no exception path."""
+    Each key splits into ``l = max(0, ceil(log2(domain)) - 4)`` low bits
+    (fixed-width packed — the "catalog-derived width" part) and a high
+    part in the bounded universe ``[0, (domain-1) >> l] ⊆ [0, 15]``,
+    encoded in unary in a bitvector of ``capacity + high_domain + 1``
+    bits (the delta part: ~1 bit/key + at most 16 zero markers).  The
+    bitvector keeps ``EF_UNIVERSE - 1`` structural spare zeros so the
+    v-th-zero decode query always has an answer, for ANY capacity and
+    ANY bucket fill.  Static shapes by construction — valid for any
+    sorted bucket content, no exception path."""
     c = max(1, int(capacity))
     d = max(1, int(domain))
-    l = max(0, (d // c).bit_length() - 1)
-    upper_bits = c + ((d - 1) >> l) + 1
+    l = max(0, (d - 1).bit_length() - 4) if d > 1 else 0
+    hd = (d - 1) >> l  # largest high part, < EF_UNIVERSE by construction
+    upper_bits = c + hd + 1 + (EF_UNIVERSE - 1)
     lw = packed_words(c, l) if l else 0
     return l, (upper_bits + 31) // 32, lw
 
@@ -227,9 +238,25 @@ def alt2_wire_bytes(m: float, P: int) -> float:
 
 
 def choose_semijoin_wire(capacity: int, m: float, P: int, *,
-                         domain: int = 0, packed: bool = True) -> int:
-    """Byte-accurate alternative choice: compare the STATIC wire bytes of
-    the compiled Alt-1 exchange (at its derived capacity and actual packed
-    widths) against the Alt-2 bitset allgather.  Returns 1 or 2."""
+                         domain: int = 0, packed: bool = True,
+                         cal=None) -> int:
+    """Alternative choice at the plan's STATIC exchange shapes.  Returns
+    1 or 2.
+
+    Without a calibration this is the byte-accurate model: compare the
+    wire bytes of the compiled Alt-1 exchange (at its derived capacity and
+    actual packed widths) against the Alt-2 bitset allgather.  With a
+    :class:`repro.core.wirecal.WireCalibration` it is LATENCY-accurate:
+    codec time + link time + per-collective latency on both sides, so a
+    cheap-bytes-but-extra-collectives alternative no longer wins on a
+    latency-dominated link."""
+    if cal is not None:
+        from repro.core import wirecal
+
+        c1, w1 = wirecal.predict_alt1_ms(capacity, P, domain,
+                                         packed=packed and domain > 0,
+                                         cal=cal)
+        c2, w2 = wirecal.predict_alt2_ms(m, P, cal=cal)
+        return 1 if c1 + w1 <= c2 + w2 else 2
     a1 = alt1_wire_bytes(capacity, P, domain, packed=packed)
     return 1 if a1 <= alt2_wire_bytes(m, P) else 2

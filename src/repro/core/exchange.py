@@ -24,11 +24,13 @@ Exchanged key sets are delta- and bit-packed before they hit the wire
 ``packed``  one uint32 buffer per exchange.  Keys are made destination-
             relative (``key - dest * domain`` — every key routed to owner
             ``d`` of a range-partitioned table lies in ``[d*domain,
-            (d+1)*domain)``), sorted, and Elias–Fano coded: the low
-            ``l = floor(log2(domain/capacity))`` bits are fixed-width
-            bit-packed (the catalog-derived width), the high bits are
-            unary-coded in a bitvector — the static-shape form of
-            delta coding, ~``l + 2`` bits/key for ANY bucket content.
+            (d+1)*domain)``), sorted, and Elias–Fano coded with a BOUNDED
+            high universe: the low ``l = max(0, ceil(log2(domain)) - 4)``
+            bits are fixed-width bit-packed (the catalog-derived width),
+            the at-most-16 distinct high parts are unary-coded in a
+            bitvector — the static-shape form of delta coding, ~``l + 2``
+            bits/key for ANY bucket content, decodable with a CONSTANT
+            number of zero-rank queries (``repro.kernels.wire_codec``).
             The validity mask is folded into the same payload as appended
             bitset words, eliminating the separate mask collective.
 
@@ -218,81 +220,86 @@ class WireFormat:
 
 
 def _pack_mask_rows(mask):
-    """(P, c) bool -> (P, ceil(c/32)) uint32 bitset rows."""
-    c = mask.shape[1]
-    pad = (-c) % 32
-    if pad:
-        mask = jnp.pad(mask, ((0, 0), (0, pad)))
-    return jax.vmap(compression.pack_bitset)(mask)
+    """(P, c) bool -> (P, ceil(c/32)) uint32 bitset rows (kernel-backed)."""
+    from repro.kernels import ops
+
+    return ops.mask_fold(mask)
 
 
 def _unpack_mask_rows(words, c: int):
-    return jax.vmap(lambda w: compression.unpack_bitset(w, c))(words)
+    from repro.kernels import ops
+
+    return ops.mask_unfold(words, n=c)
 
 
 def encode_key_buckets(buckets, bucket_mask, wf: WireFormat):
     """Encode (P, capacity) key buckets into the packed wire message
     (P, packed_request_words) uint32.  Valid keys of row ``d`` MUST be a
     sorted ascending prefix with values in ``[d*domain, (d+1)*domain)`` —
-    ``bucket_by_destination`` on key-sorted input produces exactly that."""
-    P, cap = buckets.shape
-    l, uw, _ = compression.ef_params(cap, wf.domain)
-    offs = buckets.astype(jnp.int32) - jnp.arange(P, dtype=jnp.int32)[:, None] * wf.domain
-    offs = jnp.clip(jnp.where(bucket_mask, offs, 0), 0, wf.domain - 1).astype(jnp.uint32)
-    j = jnp.arange(cap, dtype=jnp.uint32)[None, :]
-    pos = (offs >> l) + j                 # strictly increasing per row
-    rows = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[:, None], (P, cap))
-    word = jnp.where(bucket_mask, (pos >> 5).astype(jnp.int32), uw)
-    upper = jnp.zeros((P, uw), jnp.uint32).at[rows, word].add(
-        jnp.uint32(1) << (pos & jnp.uint32(31)), mode="drop"
-    )
-    parts = [upper]
-    if l:
-        lo = offs & jnp.uint32((1 << l) - 1)
-        parts.append(jax.vmap(lambda v: compression.pack_bits(v, l))(lo))
-    parts.append(_pack_mask_rows(bucket_mask))
-    return jnp.concatenate(parts, axis=1)
+    ``_bucket_presorted`` on key-sorted input produces exactly that.
+    Delegates to the kernel codec (``repro.kernels.ops.ef_encode``);
+    ``repro.kernels.ref.ef_encode`` is the bit-identical oracle."""
+    from repro.kernels import ops
+
+    return ops.ef_encode(buckets, bucket_mask, domain=wf.domain)
 
 
 def decode_key_buckets(words, capacity: int, wf: WireFormat, my_base):
     """Inverse of :func:`encode_key_buckets` on the receiving node: returns
     (global keys (P, capacity) int32, mask (P, capacity) bool).  ``my_base``
     is the receiver's first owned key (``rank * domain``)."""
-    P = words.shape[0]
-    l, uw, lw = compression.ef_params(capacity, wf.domain)
-    upper = words[:, :uw]
-    # unary-decoded high bits: position of the (j+1)-th set bit, minus j
-    lane = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
-    bits = ((upper[:, :, None] >> lane) & jnp.uint32(1)).reshape(P, uw * 32)
-    on = bits.astype(bool)
-    rank = jnp.cumsum(bits, axis=1).astype(jnp.int32)
-    rows = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[:, None], bits.shape)
-    tgt = jnp.where(on, rank - 1, capacity)     # <= capacity bits set per row
-    posv = jnp.broadcast_to(
-        jnp.arange(uw * 32, dtype=jnp.int32)[None, :], bits.shape
-    )
-    sel = jnp.zeros((P, capacity), jnp.int32).at[rows, tgt].add(posv, mode="drop")
-    j = jnp.arange(capacity, dtype=jnp.int32)[None, :]
-    hi = sel - j
-    if l:
-        lo = jax.vmap(lambda w: compression.unpack_bits(w, capacity, l))(
-            words[:, uw:uw + lw]
-        ).astype(jnp.int32)
-    else:
-        lo = jnp.zeros((P, capacity), jnp.int32)
-    mask = _unpack_mask_rows(words[:, uw + lw:uw + lw + compression.bitset_words(capacity)],
-                             capacity)
-    keys = jnp.where(mask, my_base + ((hi << l) | lo), 0).astype(jnp.int32)
-    return keys, mask
+    from repro.kernels import ops
+
+    return ops.ef_decode(words, my_base, capacity=capacity, domain=wf.domain)
 
 
-def _sort_by_key(keys, *aligned):
+def _sort_by_key(keys, mask, *aligned):
     """Pre-sort an exchange's inputs by key value so per-destination buckets
     come out ascending (the packed codec's precondition; §5.3 — the paper
-    sorts key sets before shipping for better compression).  Returns the
-    permutation (for scattering results back) and the reordered arrays."""
-    order = jnp.argsort(keys)
-    return (order, keys[order]) + tuple(a[order] for a in aligned)
+    sorts key sets before shipping for better compression).  Masked keys
+    sort LAST (sentinel), so the sorted order is grouped by destination —
+    owners are monotone in key under range partitioning — which is what
+    :func:`_bucket_presorted` requires.  Returns the permutation (for
+    scattering results back) and the reordered arrays."""
+    order = jnp.argsort(jnp.where(mask, keys, jnp.int32(2**31 - 1)))
+    return (order, keys[order], mask[order]) + tuple(a[order] for a in aligned)
+
+
+def _bucket_presorted(keys, mask, owner, num_nodes: int, capacity: int):
+    """Bucket KEY-SORTED masked keys into per-destination rows with gathers
+    only — no (n,)-sized scatters.  After :func:`_sort_by_key` the valid
+    keys form contiguous runs per destination (range partitioning makes the
+    owner monotone in key; masked keys sit at the end), so each bucket row
+    is a strided gather from ``starts[d]``.
+
+    Returns (buckets, bucket_mask, (dest_of_key, slot_of_key), src,
+    overflow); ``src`` is the (P, capacity) gather index used for the
+    buckets, reusable for aligned payloads (fused value rows)."""
+    n = keys.shape[0]
+    dest = jnp.where(mask, owner, num_nodes)  # masked keys -> virtual node P
+    counts = jnp.zeros(num_nodes + 1, jnp.int32).at[dest].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_group = jnp.arange(n, dtype=jnp.int32) - starts[dest]
+    overflow = jnp.any((pos_in_group >= capacity) & (dest < num_nodes))
+    slot_of_key = jnp.minimum(pos_in_group, capacity - 1)
+    s = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    src = jnp.minimum(starts[:num_nodes][:, None] + s, n - 1)
+    bucket_mask = s < jnp.minimum(counts[:num_nodes], capacity)[:, None]
+    buckets = jnp.where(bucket_mask, keys[src], 0)
+    return buckets, bucket_mask, (dest, slot_of_key), src, overflow
+
+
+def _codec_prediction(capacity: int, P: int, wf: WireFormat):
+    """Predicted (encode_ms, decode_ms) of this exchange's packed codec
+    under the machine calibration — trace-time observability only (events
+    and histograms), never part of the compiled computation.  0.0 on raw
+    wire (no codec runs)."""
+    if not wf.packed:
+        return 0.0, 0.0
+    from repro.core import wirecal
+
+    return wirecal.predict_codec_ms(int(capacity), int(P), wf.domain,
+                                    cal=wirecal.cached())
 
 
 # ---------------------------------------------------------------------------
@@ -376,26 +383,33 @@ def request_reply(
     if observer is not None:
         # fires at TRACE time — once per compiled specialization, with the
         # exchange's static shape (the dynamic byte truth comes from HLO)
+        enc_ms, dec_ms = _codec_prediction(capacity, P, wf)
         observer.event(
             "exchange.request_reply", cat="exchange", label=label,
             capacity=int(capacity), wire=wf.kind,
             key_bits=int(wf.key_bits), backend=backend,
             collectives=2 if wf.packed else 3,
+            encode_ms=enc_ms, decode_ms=dec_ms,
         )
+        observer.metrics.histogram("exchange.encode_ms").record(enc_ms)
+        observer.metrics.histogram("exchange.decode_ms").record(dec_ms)
     order = None
     if wf.packed:
+        # sorted + gather-bucketed + EF-coded: no (n,)-sized scatter touches
+        # the packed hot path (codec and bucketing are gather/reshape only)
         order, keys, mask, owner = _sort_by_key(keys, mask, owner)
-    buckets, bucket_mask, (dest_of_key, slot_of_key), overflow = (
-        bucket_by_destination(keys, mask, owner, P, capacity)
-    )
-    # ship requests to owners
-    if wf.packed:
+        buckets, bucket_mask, (dest_of_key, slot_of_key), _, overflow = (
+            _bucket_presorted(keys, mask, owner, P, capacity)
+        )
         msg = encode_key_buckets(buckets, bucket_mask, wf)
         my_base = lax.axis_index(axis) * wf.domain
         req, req_mask = decode_key_buckets(
             all_to_all(msg, axis, backend=backend), capacity, wf, my_base
         )
     else:
+        buckets, bucket_mask, (dest_of_key, slot_of_key), overflow = (
+            bucket_by_destination(keys, mask, owner, P, capacity)
+        )
         req = all_to_all(buckets, axis, backend=backend)
         req_mask = all_to_all(bucket_mask, axis, backend=backend)
     # owners evaluate the lookup on their partition
@@ -454,23 +468,24 @@ def exchange_by_owner(
     wf = wire or WireFormat.raw()
     fused = wf.packed and values.dtype.itemsize == 4
     if observer is not None:
+        enc_ms, dec_ms = _codec_prediction(capacity, P, wf)
         observer.event(
             "exchange.by_owner", cat="exchange", label=label,
             capacity=int(capacity), wire=wf.kind,
             key_bits=int(wf.key_bits), backend=backend,
             collectives=1 if fused else 3,
+            encode_ms=enc_ms, decode_ms=dec_ms,
         )
+        observer.metrics.histogram("exchange.encode_ms").record(enc_ms)
+        observer.metrics.histogram("exchange.decode_ms").record(dec_ms)
     if fused:
         # no un-sort needed: callers consume the received buckets by key
-        _, keys, values, mask, owner = _sort_by_key(keys, values, mask, owner)
-    buckets, bucket_mask, (dest_of_key, slot_of_key), overflow = (
-        bucket_by_destination(keys, mask, owner, P, capacity)
-    )
-    vbuckets = jnp.zeros((P, capacity), values.dtype)
-    # masked keys carry dest == P (out of bounds) and are dropped
-    vbuckets = vbuckets.at[dest_of_key, slot_of_key].set(values, mode="drop")
-    vbuckets = jnp.where(bucket_mask, vbuckets, 0)
-    if fused:
+        _, keys, mask, values, owner = _sort_by_key(keys, mask, values, owner)
+        buckets, bucket_mask, _, src, overflow = _bucket_presorted(
+            keys, mask, owner, P, capacity
+        )
+        # value rows ride the same gather index as the key buckets
+        vbuckets = jnp.where(bucket_mask, values[src], 0)
         msg = jnp.concatenate(
             [encode_key_buckets(buckets, bucket_mask, wf),
              lax.bitcast_convert_type(vbuckets, jnp.uint32)],
@@ -484,6 +499,13 @@ def exchange_by_owner(
         recv_vals = lax.bitcast_convert_type(recv[:, -capacity:], values.dtype)
         recv_vals = jnp.where(recv_mask, recv_vals, 0)
         return recv_keys, recv_vals, recv_mask, overflow
+    buckets, bucket_mask, (dest_of_key, slot_of_key), overflow = (
+        bucket_by_destination(keys, mask, owner, P, capacity)
+    )
+    vbuckets = jnp.zeros((P, capacity), values.dtype)
+    # masked keys carry dest == P (out of bounds) and are dropped
+    vbuckets = vbuckets.at[dest_of_key, slot_of_key].set(values, mode="drop")
+    vbuckets = jnp.where(bucket_mask, vbuckets, 0)
     recv_keys = all_to_all(buckets, axis, backend=backend)
     recv_vals = all_to_all(vbuckets, axis, backend=backend)
     recv_mask = all_to_all(bucket_mask, axis, backend=backend)

@@ -1,0 +1,241 @@
+"""Latency calibration for the wire-format choice (paper §3.2.1, §5.3).
+
+The byte-accurate model in :mod:`repro.core.compression` says how many
+bytes each wire format ships; whether the PACKED format is actually
+*faster* depends on where the exchange is bottlenecked.  Compression pays
+only when the codec's throughput exceeds the network's — the classic
+result (Rödiger et al.) that motivates the paper's vectorized codecs.
+This module holds the three calibrated rates that settle the question and
+a roofline predictor over them:
+
+  ``predicted_ms = codec_bytes / codec_GBps            (encode + decode)
+                 + wire_bytes  / link_GBps             (serialized volume)
+                 + collectives * msg_ms``              (per-message latency)
+
+``raw`` wire has no codec term but ships ~4–6x the bytes in 3 collectives;
+``packed`` pays the codec term, ships the Elias–Fano words in 2.  The
+crossover is a property of the MACHINE, not the plan, so the rates are
+calibrated once (``python -m repro.core.wirecal``), persisted under
+``experiments/bench/`` and loaded by the planner; builtin defaults model
+the paper's GbE cluster (link far slower than the codec → packed wins),
+keeping plans deterministic when no calibration file exists.
+
+Codec throughput is MEASURED by timing the jit'd kernels on a
+representative shape.  Link bandwidth and per-message latency cannot be
+measured on simulated devices (host-local "collectives" move memory, not
+packets), so they are deployment knobs: override them in the calibration
+file or via ``REPRO_WIRE_CAL`` when targeting real interconnect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+from repro.core import compression
+
+# calibration file location: env override, else the repo's bench artifacts
+ENV_VAR = "REPRO_WIRE_CAL"
+DEFAULT_PATH = os.path.join("experiments", "bench", "wire_calibration.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCalibration:
+    """Machine rates of the roofline model (GB/s and ms).
+
+    ``encode_gbps``/``decode_gbps``: packed-codec throughput in wire bytes
+    produced/consumed per second.  ``link_gbps``: per-node all-to-all
+    bandwidth.  ``msg_ms``: fixed per-collective latency (startup + sync).
+    """
+
+    encode_gbps: float = 1.0
+    decode_gbps: float = 1.0
+    link_gbps: float = 0.125   # the paper's GbE cluster: ~1 Gbit/s links
+    msg_ms: float = 0.05
+    source: str = "builtin"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WireCalibration":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+BUILTIN = WireCalibration()
+
+
+def load(path: Optional[str] = None) -> WireCalibration:
+    """Calibration from ``path`` / $REPRO_WIRE_CAL / the default location,
+    falling back to :data:`BUILTIN` when no file exists."""
+    path = path or os.environ.get(ENV_VAR) or DEFAULT_PATH
+    try:
+        with open(path) as f:
+            return WireCalibration.from_json(json.load(f))
+    except (OSError, ValueError):
+        return BUILTIN
+
+
+_CACHED: Optional[WireCalibration] = None
+
+
+def cached() -> WireCalibration:
+    """Process-cached :func:`load` — for per-trace instrumentation sites
+    that must not re-read the calibration file on every event."""
+    global _CACHED
+    if _CACHED is None:
+        _CACHED = load()
+    return _CACHED
+
+
+def save(cal: WireCalibration, path: Optional[str] = None) -> str:
+    path = path or os.environ.get(ENV_VAR) or DEFAULT_PATH
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(cal.to_json(), f, indent=1)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# roofline predictor (ms; bytes / GBps / 1e6 == ms)
+# ---------------------------------------------------------------------------
+
+
+def alt1_codec_bytes(capacity: int, P: int, domain: int) -> float:
+    """Bytes the packed codec touches for one Alt-1 exchange: the EF
+    request rows (encoded at the sender, decoded at the receiver) plus the
+    folded boolean reply bitsets."""
+    rows = max(P - 1, 1)
+    return float(rows * (compression.packed_request_words(capacity, domain)
+                         + compression.bitset_words(capacity)) * 4)
+
+
+def predict_codec_ms(capacity: int, P: int, domain: int, *,
+                     cal: Optional[WireCalibration] = None):
+    """(encode_ms, decode_ms) of the packed codec for one Alt-1 exchange —
+    the two halves of the roofline's codec term, split out so the exchange
+    layer can attribute them separately (spans/histograms)."""
+    cal = cal or BUILTIN
+    cb = alt1_codec_bytes(capacity, P, domain)
+    return cb / (cal.encode_gbps * 1e6), cb / (cal.decode_gbps * 1e6)
+
+
+def predict_alt1_ms(capacity: int, P: int, domain: int, *, packed: bool,
+                    cal: Optional[WireCalibration] = None):
+    """(codec_ms, wire_ms) of one Alt-1 request/reply exchange.  ``wire_ms``
+    is link volume plus per-collective latency at the format's collective
+    count (2 packed / 1+2 raw — the request key+mask pair and the reply)."""
+    cal = cal or BUILTIN
+    nbytes = compression.alt1_wire_bytes(capacity, P, domain, packed=packed)
+    if packed and domain > 0:
+        codec_ms = sum(predict_codec_ms(capacity, P, domain, cal=cal))
+        collectives = 2
+    else:
+        codec_ms = 0.0
+        collectives = 3
+    wire_ms = nbytes / (cal.link_gbps * 1e6) + collectives * cal.msg_ms
+    return codec_ms, wire_ms
+
+
+def predict_alt2_ms(m: float, P: int, *,
+                    cal: Optional[WireCalibration] = None):
+    """(codec_ms, wire_ms) of the Alt-2 replicated-bitset allgather (one
+    collective; the bitset is packed on both wire kinds)."""
+    cal = cal or BUILTIN
+    nbytes = compression.alt2_wire_bytes(m, P)
+    codec_ms = (nbytes / (cal.encode_gbps * 1e6)
+                + nbytes / (cal.decode_gbps * 1e6))
+    wire_ms = nbytes / (cal.link_gbps * 1e6) + cal.msg_ms
+    return codec_ms, wire_ms
+
+
+def choose_wire_kind(capacity: int, P: int, domain: int,
+                     cal: Optional[WireCalibration] = None) -> str:
+    """'packed' iff the roofline predicts the packed Alt-1 exchange is at
+    least as fast as raw: the codec only pays when the exchange is
+    network-bound (slow link / fast codec), never on codec-bound setups."""
+    pc, pw = predict_alt1_ms(capacity, P, domain, packed=True, cal=cal)
+    _, rw = predict_alt1_ms(capacity, P, domain, packed=False, cal=cal)
+    return "packed" if pc + pw <= rw else "raw"
+
+
+# ---------------------------------------------------------------------------
+# codec-throughput calibration (run once per machine)
+# ---------------------------------------------------------------------------
+
+
+def calibrate(*, capacity: int = 4096, domain: int = 3750, nodes: int = 8,
+              repeat: int = 20, cal: Optional[WireCalibration] = None
+              ) -> WireCalibration:
+    """Measure the jit'd kernel codec's encode/decode throughput on a
+    representative shape and return a calibration carrying the measured
+    rates (link parameters inherited from ``cal`` / builtin — they are
+    deployment knobs, see module docstring)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+
+    base = cal or BUILTIN
+    rng = np.random.default_rng(0)
+    fill = int(capacity * 0.8)
+    buckets = np.zeros((nodes, capacity), np.int32)
+    mask = np.zeros((nodes, capacity), bool)
+    for p in range(nodes):
+        buckets[p, :fill] = np.sort(
+            rng.integers(0, domain, size=fill)) + p * domain
+        mask[p, :fill] = True
+    buckets, mask = jnp.asarray(buckets), jnp.asarray(mask)
+    words = ops.ef_encode(buckets, mask, domain=domain)
+    jax.block_until_ready(
+        ops.ef_decode(words, jnp.int32(0), capacity=capacity, domain=domain))
+
+    def best(fn):
+        times = []
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    nbytes = nodes * compression.packed_request_words(capacity, domain) * 4
+    t_enc = best(lambda: ops.ef_encode(buckets, mask, domain=domain))
+    t_dec = best(lambda: ops.ef_decode(words, jnp.int32(0),
+                                       capacity=capacity, domain=domain))
+    return dataclasses.replace(
+        base,
+        encode_gbps=nbytes / t_enc / 1e9,
+        decode_gbps=nbytes / t_dec / 1e9,
+        source=f"calibrated(capacity={capacity},domain={domain},"
+               f"nodes={nodes})",
+    )
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--capacity", type=int, default=4096)
+    ap.add_argument("--domain", type=int, default=3750)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--repeat", type=int, default=20)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+    cal = calibrate(capacity=args.capacity, domain=args.domain,
+                    nodes=args.nodes, repeat=args.repeat, cal=load(args.out))
+    path = save(cal, args.out)
+    print(f"wrote {path}: encode {cal.encode_gbps:.3f} GB/s, "
+          f"decode {cal.decode_gbps:.3f} GB/s, link {cal.link_gbps} GB/s, "
+          f"msg {cal.msg_ms} ms")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,7 +12,14 @@ import os
 
 import jax
 
-from repro.kernels import bitset_pack, grouped_agg, mbit_codec, ref, topk_select
+from repro.kernels import (
+    bitset_pack,
+    grouped_agg,
+    mbit_codec,
+    ref,
+    topk_select,
+    wire_codec,
+)
 
 _FORCE_REF = os.environ.get("REPRO_NO_KERNELS", "0") == "1"
 _USE_KERNELS = not _FORCE_REF
@@ -65,6 +72,76 @@ def mbit_encode(q, *, m, group):
 @functools.partial(jax.jit, static_argnames=("m", "group"))
 def mbit_decode_bounds(words, shifts, *, m, group):
     return mbit_codec.decode_bounds(words, shifts, m, group)
+
+
+# ---------------------------------------------------------------------------
+# wire codec (§3.2.1): EF bucket encode/decode + mask fold/unfold
+#
+# The Pallas lane kernels compile only on real accelerator backends
+# (interpret mode is Python per grid step — orders of magnitude too slow
+# for the exchange latency budget).  On CPU the kernel path IS the
+# gather-light XLA formulation in wire_codec.py, which is what the
+# latency gate measures; parity tests exercise the Pallas kernels in
+# interpret mode directly against ref.py.
+# ---------------------------------------------------------------------------
+
+
+def _codec_impl() -> str:
+    """'ref' | 'xla' | 'pallas' — resolved at CALL time so the benchmark's
+    use_kernels() toggle selects a distinct jit cache entry (the impl is a
+    static argument of the jitted workers below, never a baked-in global)."""
+    if not _USE_KERNELS:
+        return "ref"
+    return "pallas" if not _interpret() else "xla"
+
+
+@functools.partial(jax.jit, static_argnames=("domain", "impl"))
+def _ef_encode(buckets, bucket_mask, *, domain, impl):
+    if impl == "ref":
+        return ref.ef_encode(buckets, bucket_mask, domain)
+    return wire_codec.ef_encode(
+        buckets, bucket_mask, domain, use_pallas=impl == "pallas"
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "domain", "impl"))
+def _ef_decode(words, my_base, *, capacity, domain, impl):
+    if impl == "ref":
+        return ref.ef_decode(words, capacity, domain, my_base)
+    return wire_codec.ef_decode(
+        words, capacity, domain, my_base, use_pallas=impl == "pallas"
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _mask_fold(mask, *, impl):
+    if impl == "ref":
+        return ref.mask_fold(mask)
+    return wire_codec.mask_fold(mask, use_pallas=impl == "pallas")
+
+
+@functools.partial(jax.jit, static_argnames=("n", "impl"))
+def _mask_unfold(words, *, n, impl):
+    if impl == "ref":
+        return ref.mask_unfold(words, n)
+    return wire_codec.mask_unfold(words, n, use_pallas=impl == "pallas")
+
+
+def ef_encode(buckets, bucket_mask, *, domain):
+    return _ef_encode(buckets, bucket_mask, domain=domain, impl=_codec_impl())
+
+
+def ef_decode(words, my_base, *, capacity, domain):
+    return _ef_decode(words, my_base, capacity=capacity, domain=domain,
+                      impl=_codec_impl())
+
+
+def mask_fold(mask):
+    return _mask_fold(mask, impl=_codec_impl())
+
+
+def mask_unfold(words, *, n):
+    return _mask_unfold(words, n=n, impl=_codec_impl())
 
 
 # ---------------------------------------------------------------------------

@@ -97,3 +97,89 @@ def flash_attention(q, k, v, causal=True, window=None, prefix=0):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
     return (o.reshape(B, H, S, D).transpose(0, 2, 1, 3)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# wire codec (§3.2.1): EF key buckets + folded validity mask
+# ---------------------------------------------------------------------------
+
+
+def mask_fold(mask):
+    """(P, c) bool -> (P, ceil(c/32)) uint32 bitset rows (little-endian bit
+    order within each word, row-major words)."""
+    import jax
+
+    c = mask.shape[1]
+    pad = (-c) % 32
+    if pad:
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    return jax.vmap(compression.pack_bitset)(mask)
+
+
+def mask_unfold(words, n):
+    import jax
+
+    return jax.vmap(lambda w: compression.unpack_bitset(w, n))(words)
+
+
+def ef_encode(buckets, bucket_mask, domain):
+    """Scatter-based EF bucket encoder: row ``d`` of ``buckets`` holds a
+    sorted ascending prefix of keys in ``[d*domain, (d+1)*domain)`` under
+    ``bucket_mask``; returns the packed wire rows
+    (P, ``compression.packed_request_words(capacity, domain)``) uint32.
+    One upper-bitvector one per key at position ``(off >> l) + j`` (unary
+    high parts), fixed-width packed low bits, appended mask bitset."""
+    import jax
+
+    P, cap = buckets.shape
+    l, uw, _ = compression.ef_params(cap, domain)
+    offs = buckets.astype(jnp.int32) - jnp.arange(P, dtype=jnp.int32)[:, None] * domain
+    offs = jnp.clip(jnp.where(bucket_mask, offs, 0), 0, domain - 1).astype(jnp.uint32)
+    j = jnp.arange(cap, dtype=jnp.uint32)[None, :]
+    pos = (offs >> l) + j                 # strictly increasing per row
+    rows = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[:, None], (P, cap))
+    word = jnp.where(bucket_mask, (pos >> 5).astype(jnp.int32), uw)
+    upper = jnp.zeros((P, uw), jnp.uint32).at[rows, word].add(
+        jnp.uint32(1) << (pos & jnp.uint32(31)), mode="drop"
+    )
+    parts = [upper]
+    if l:
+        lo = jnp.where(bucket_mask, offs & jnp.uint32((1 << l) - 1), jnp.uint32(0))
+        parts.append(jax.vmap(lambda v: compression.pack_bits(v, l))(lo))
+    parts.append(mask_fold(bucket_mask))
+    return jnp.concatenate(parts, axis=1)
+
+
+def ef_decode(words, capacity, domain, my_base):
+    """Rank/select EF bucket decoder (inverse of :func:`ef_encode` on the
+    receiving node): bit-expands the upper bitvector, ranks the set bits
+    with one cumsum, and scatters each one's position back to its slot.
+    Returns (global keys (P, capacity) int32, mask (P, capacity) bool)."""
+    import jax
+
+    P = words.shape[0]
+    l, uw, lw = compression.ef_params(capacity, domain)
+    upper = words[:, :uw]
+    lane = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = ((upper[:, :, None] >> lane) & jnp.uint32(1)).reshape(P, uw * 32)
+    on = bits.astype(bool)
+    rank = jnp.cumsum(bits, axis=1).astype(jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[:, None], bits.shape)
+    tgt = jnp.where(on, rank - 1, capacity)     # <= capacity bits set per row
+    posv = jnp.broadcast_to(
+        jnp.arange(uw * 32, dtype=jnp.int32)[None, :], bits.shape
+    )
+    sel = jnp.zeros((P, capacity), jnp.int32).at[rows, tgt].add(posv, mode="drop")
+    j = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    hi = sel - j
+    if l:
+        lo = jax.vmap(lambda w: compression.unpack_bits(w, capacity, l))(
+            words[:, uw:uw + lw]
+        ).astype(jnp.int32)
+    else:
+        lo = jnp.zeros((P, capacity), jnp.int32)
+    mask = mask_unfold(
+        words[:, uw + lw:uw + lw + compression.bitset_words(capacity)], capacity
+    )
+    keys = jnp.where(mask, my_base + ((hi << l) | lo), 0).astype(jnp.int32)
+    return keys, mask

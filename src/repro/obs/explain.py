@@ -61,6 +61,8 @@ class SemiJoinInfo:
     wire_kind: str              # raw | packed
     key_bits: int
     gamma: float                # predicted target-predicate selectivity
+    codec_ms: Optional[float] = None     # roofline: predicted codec time
+    wire_ms: Optional[float] = None      # roofline: link volume + msg latency
     a2a_bytes: Optional[int] = None      # observed, per device
     a2a_count: Optional[int] = None
 
@@ -71,6 +73,9 @@ class SemiJoinInfo:
             if self.wire_kind == "packed":
                 s += f"/{self.key_bits}b"
         s += f" gamma={self.gamma:.3g}"
+        if self.codec_ms is not None and self.alt != "local":
+            s += (f" predict codec {self.codec_ms:.3g}ms"
+                  f"+wire {self.wire_ms:.3g}ms")
         if self.a2a_bytes is not None:
             s += (f" | observed all-to-all {_fmt_bytes(self.a2a_bytes)}"
                   f" in {self.a2a_count} collectives")
@@ -208,6 +213,15 @@ class ExplainReport:
                     f"{k} {_fmt_bytes(v)} x{obs['collective_count_by_op'][k]}"
                     for k, v in sorted(coll.items()))
                 lines.append(f"collectives/device: {body}")
+            enc = obs.get("exchange.encode_ms")
+            dec = obs.get("exchange.decode_ms")
+            if enc or dec:
+                parts = []
+                for tag, h in (("encode", enc), ("decode", dec)):
+                    if h:
+                        parts.append(f"{tag} mean {h['mean']:.3g} ms "
+                                     f"(n={h['count']})")
+                lines.append("codec predicted/exchange: " + ", ".join(parts))
             lines.append(
                 f"counters: exchange.overflow={obs['overflow_count']} "
                 f"plan.compile_events={obs['compile_events']} "

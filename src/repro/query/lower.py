@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import aggregation, late_materialization, semijoin, topk
+from repro.core import wirecal
 from repro.core.compression import choose_semijoin_wire
 from repro.core.exchange import WireFormat
 from repro.query import stats as qstats
@@ -101,18 +102,32 @@ class _SemiJoinPlan:
     # request exchange WOULD need under this binding (the static verifier
     # compares it against the compiled capacity for other bindings)
     derived_capacity: int = 0
+    # roofline predictions (repro.core.wirecal) for the chosen alternative
+    # at its static shapes: codec time vs link volume + collective latency
+    codec_ms: float = 0.0
+    wire_ms: float = 0.0
 
 
 def _decide_semijoins(root, catalog: Catalog, query_name=None,
-                      wire: str = "packed", binding=None) -> dict:
+                      wire: str = "packed", binding=None, cal=None,
+                      predict_cal=None) -> dict:
     """Choose each SemiJoin's physical alternative and buffer capacity from
     the §3.2.2 model, using selectivities accumulated along the chain.  The
-    alternative choice is BYTE-ACCURATE: it compares the static wire bytes
-    of the compiled Alt-1 exchange — at its derived capacity and actual
-    packed widths under ``wire`` — against the Alt-2 bitset allgather.
-    ``binding`` resolves parameterized predicates for the estimates; an
-    unbound param is sized for the worst binding in its declared range
-    (see ``repro.query.stats``)."""
+    alternative choice is BYTE-ACCURATE by default: it compares the static
+    wire bytes of the compiled Alt-1 exchange — at its derived capacity and
+    actual packed widths under ``wire`` — against the Alt-2 bitset
+    allgather.  With a ``cal`` (:class:`repro.core.wirecal.WireCalibration`)
+    the comparison is LATENCY-accurate (codec + link + per-collective
+    roofline), and ``wire="auto"`` lets the same model pick packed vs raw
+    per semi-join.  Every decision carries its predicted ``codec_ms`` /
+    ``wire_ms`` for EXPLAIN, computed with ``predict_cal`` (else ``cal``,
+    else builtin) — a prediction-only calibration NEVER changes the
+    decisions, so EXPLAIN can render machine-calibrated estimates for the
+    exact plan the byte model compiled.  ``binding`` resolves parameterized
+    predicates for the estimates; an unbound param is sized for the worst
+    binding in its declared range (see ``repro.query.stats``)."""
+    pcal = (predict_cal if predict_cal is not None
+            else cal if cal is not None else wirecal.BUILTIN)
     decisions = {}
     base = None
     sel = 1.0
@@ -156,7 +171,8 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None,
                     tinfo.num_rows, sel, catalog.num_nodes
                 )
             wf = qstats.wire_format_for(
-                target.num_rows, catalog.num_nodes, kind=wire
+                target.num_rows, catalog.num_nodes, kind=wire,
+                capacity=cap, cal=cal,
             )
             if alt == "auto":
                 if local_ok:
@@ -164,14 +180,24 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None,
                 else:
                     choice = choose_semijoin_wire(
                         cap, target.num_rows, max(catalog.num_nodes, 1),
-                        domain=wf.domain, packed=wf.packed,
+                        domain=wf.domain, packed=wf.packed, cal=cal,
                     )
                     alt = "request" if choice == 1 else "bitset"
+            P = max(catalog.num_nodes, 1)
+            if alt == "request":
+                codec_ms, wire_ms = wirecal.predict_alt1_ms(
+                    cap, P, wf.domain, packed=wf.packed, cal=pcal)
+            elif alt == "bitset":
+                codec_ms, wire_ms = wirecal.predict_alt2_ms(
+                    target.num_rows, P, cal=pcal)
+            else:
+                codec_ms, wire_ms = 0.0, 0.0
             decisions[id(node)] = _SemiJoinPlan(
                 alt=alt, capacity=cap if alt == "request" else 0,
                 key=f"{query_name or 'query'}_sj{len(decisions)}",
                 wire=wf, table=node.table, gamma=gamma,
                 derived_capacity=cap,
+                codec_ms=codec_ms, wire_ms=wire_ms,
             )
             sel *= gamma
     return decisions
@@ -184,7 +210,7 @@ SemiJoinPlan = _SemiJoinPlan
 
 
 def explain_chain(query: Query, catalog: Catalog, *, wire: str = "packed",
-                  binding=None) -> list:
+                  binding=None, cal=None, predict_cal=None) -> list:
     """Scan-first per-operator annotations for EXPLAIN: each operator as a
     dict carrying the cost model's view of it — predicted selectivity for
     filters/probes, the chosen alternative / derived capacity / wire
@@ -194,7 +220,8 @@ def explain_chain(query: Query, catalog: Catalog, *, wire: str = "packed",
     root = query.root
     validate(root, catalog)
     decisions = _decide_semijoins(root, catalog, query_name=query.name,
-                                  wire=wire, binding=binding)
+                                  wire=wire, binding=binding, cal=cal,
+                                  predict_cal=predict_cal)
     rows = []
     base, sel = None, 1.0
     for node in _chain(root):
@@ -219,6 +246,7 @@ def explain_chain(query: Query, catalog: Catalog, *, wire: str = "packed",
                 "op": "SemiJoin", "table": node.table, "key": node.key,
                 "pred": node.pred, "alt": d.alt, "capacity": d.capacity,
                 "capacity_key": d.key, "wire": d.wire, "gamma": d.gamma,
+                "codec_ms": d.codec_ms, "wire_ms": d.wire_ms,
                 "cum_sel": sel,
             })
         elif isinstance(node, Exists):
@@ -443,7 +471,9 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
                     # carries an explicit override under this plan's key
                     capacity=ctx.cap(plan.key, plan.capacity),
                     axis=ctx.axis, backend=ctx.backend,
-                    wire=(plan.wire if ctx.wire == "packed"
+                    # the plan's per-semijoin wire decision ("auto" may mix
+                    # packed and raw) unless the context forces raw
+                    wire=(plan.wire if ctx.wire != "raw"
                           else WireFormat.raw()),
                     observer=getattr(ctx, "obs", None), label=plan.key,
                 )

@@ -131,11 +131,26 @@ def request_capacity(table_rows: int, selectivity: float, num_nodes: int) -> int
 
 
 def wire_format_for(table_rows: int, num_nodes: int,
-                    kind: str = "packed") -> WireFormat:
+                    kind: str = "packed", *, capacity: int = 0,
+                    cal=None) -> WireFormat:
     """Wire format of an exchange addressing the owners of a table
     range-partitioned over ``num_nodes``: the per-destination key domain is
     ``rows_per_node`` and its catalog-derived ``required_width`` fixes the
-    packed key width (``repro.core.compression``)."""
+    packed key width (``repro.core.compression``).
+
+    ``kind="auto"`` asks the LATENCY model: packed only when the roofline
+    (``repro.core.wirecal``) predicts the codec time is bought back by the
+    byte reduction — i.e. the exchange is network-bound, not codec-bound.
+    Requires the exchange ``capacity``; ``cal`` defaults to the persisted
+    (or builtin) machine calibration."""
+    if kind == "auto":
+        from repro.core import wirecal
+
+        wf = WireFormat.packed_for(table_rows, num_nodes)
+        kind = wirecal.choose_wire_kind(
+            int(capacity), num_nodes, wf.domain,
+            cal=cal if cal is not None else wirecal.load())
+        return wf if kind == "packed" else WireFormat.raw()
     if kind != "packed":
         return WireFormat.raw()
     return WireFormat.packed_for(table_rows, num_nodes)

@@ -195,3 +195,8 @@ register_rule(
     "NUM004", WARN, "Non-integral semi-join key",
     "A semi-join key column has float (n_distinct=0) catalog stats; "
     "Elias-Fano key packing and owner routing assume integral keys.")
+register_rule(
+    "WIRE001", INFO, "Forced packed wire predicted slower than raw",
+    "The wire= override forces the packed codec on a request exchange, "
+    "but the supplied machine calibration's roofline model predicts the "
+    "codec time exceeds the raw link-time savings; raw would be faster.")

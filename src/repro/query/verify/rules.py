@@ -14,6 +14,7 @@ from typing import Mapping, Optional
 
 import numpy as np
 
+from repro.core import wirecal
 from repro.query import stats as qstats
 from repro.query.lower import (
     ONEHOT_MAX_GROUPS,
@@ -73,6 +74,10 @@ class VerifyContext:
     # PlanContext capacity overrides keyed "<query>_sj<i>"
     capacities: Mapping = dataclasses.field(default_factory=dict)
     artifacts: Optional[PlanArtifacts] = None
+    # machine roofline calibration (repro.core.wirecal.WireCalibration)
+    # for the wire-choice audit; None disables WIRE001 so the verdict
+    # never depends on whatever calibration file the host happens to have
+    calibration: Optional[object] = None
 
     @property
     def name(self) -> str:
@@ -557,18 +562,61 @@ def check_param_ranges(ctx: VerifyContext):
     return out
 
 
+# ---------------------------------------------------------------------------
+# analyzer 6: wire-choice audit under a machine calibration (WIRE001)
+# ---------------------------------------------------------------------------
+
+
+def check_wire_choice(ctx: VerifyContext):
+    """Audit forced-packed request exchanges against the roofline latency
+    model.  Only runs when the caller supplies an explicit calibration —
+    the prediction depends on measured codec/link throughputs, and a
+    verifier must not change verdicts because of a stray calibration file
+    on the host."""
+    out = []
+    cal = ctx.calibration
+    if cal is None or ctx.wire != "packed":
+        return out
+    prepared = decide_semijoins(
+        ctx.query.root, ctx.catalog, query_name=ctx.query.name,
+        wire=ctx.wire, binding=dict(ctx.stats_binding) or None)
+    P = max(ctx.catalog.num_nodes, 1)
+    for plan in prepared.values():
+        if plan.alt != "request" or not plan.wire.packed:
+            continue
+        cap = int(ctx.capacities.get(plan.key, plan.capacity))
+        pc, pw = wirecal.predict_alt1_ms(cap, P, plan.wire.domain,
+                                         packed=True, cal=cal)
+        rc, rw = wirecal.predict_alt1_ms(cap, P, plan.wire.domain,
+                                         packed=False, cal=cal)
+        if pc + pw > rc + rw:
+            out.append(make_diagnostic(
+                "WIRE001",
+                f"request semi-join {plan.key} is forced onto the packed "
+                f"wire, but the calibration predicts it at "
+                f"{pc + pw:.3g} ms (codec {pc:.3g} + wire {pw:.3g}) vs "
+                f"{rc + rw:.3g} ms raw — the codec costs more than the "
+                f"link saves; use wire='raw' or recalibrate",
+                query=ctx.name, site=plan.key, table=plan.table,
+                packed_ms=pc + pw, raw_ms=rc + rw,
+                codec_ms=pc, wire_ms=pw))
+    return out
+
+
 ANALYZERS = (
     check_collectives,
     check_capacity,
     check_recompilation,
     check_numeric,
     check_param_ranges,
+    check_wire_choice,
 )
 
 
 def verify(query, catalog: Catalog, *, wire: str = "packed", binding=None,
            stats_binding=None, capacities=None,
-           artifacts: Optional[PlanArtifacts] = None) -> VerifyReport:
+           artifacts: Optional[PlanArtifacts] = None,
+           calibration=None) -> VerifyReport:
     """Statically verify one query against ``catalog``: run every
     registered analyzer and return a :class:`VerifyReport`.
 
@@ -578,7 +626,10 @@ def verify(query, catalog: Catalog, *, wire: str = "packed", binding=None,
     capacities were derived from (the auto-parameterization defaults);
     ``capacities`` are the driver's PlanContext overrides; ``artifacts``
     optionally supplies lowering outputs (per-shard collective scripts,
-    HLO text, parsed collective instructions) for the SPMD analyzers.
+    HLO text, parsed collective instructions) for the SPMD analyzers;
+    ``calibration`` (a :class:`repro.core.wirecal.WireCalibration`)
+    enables the WIRE001 wire-choice audit against that machine's
+    roofline model.
     """
     if not isinstance(query, Query):
         query = Query(root=query)
@@ -591,6 +642,7 @@ def verify(query, catalog: Catalog, *, wire: str = "packed", binding=None,
         stats_binding=dict(stats_binding or {}),
         capacities=dict(capacities or {}),
         artifacts=artifacts,
+        calibration=calibration,
     )
     diags = []
     for analyzer in ANALYZERS:

@@ -98,3 +98,26 @@ def wire_formats(tables, num_nodes: int) -> dict:
         name: wire_format_for(int(tables[target].num_rows), num_nodes)
         for name, target in _EXCHANGE_TARGETS.items()
     }
+
+
+def wire_predictions(tables, num_nodes: int, capacities: dict,
+                     cal=None) -> dict:
+    """Roofline latency predictions per hand-plan exchange: name ->
+    ``{"kind", "codec_ms", "wire_ms"}`` under the machine calibration
+    (``repro.core.wirecal``; builtin defaults when None).  ``kind`` is what
+    the latency model would CHOOSE for that exchange — hand plans compiled
+    with a fixed wire can be audited against it (rule WIRE001)."""
+    from repro.core import wirecal
+
+    cal = cal if cal is not None else wirecal.load()
+    out = {}
+    for name, target in _EXCHANGE_TARGETS.items():
+        cap = int(capacities.get(name, 0))
+        if cap <= 0:
+            continue
+        wf = wire_format_for(int(tables[target].num_rows), num_nodes)
+        kind = wirecal.choose_wire_kind(cap, num_nodes, wf.domain, cal=cal)
+        codec_ms, wire_ms = wirecal.predict_alt1_ms(
+            cap, num_nodes, wf.domain, packed=kind == "packed", cal=cal)
+        out[name] = {"kind": kind, "codec_ms": codec_ms, "wire_ms": wire_ms}
+    return out

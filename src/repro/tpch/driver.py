@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import Cluster, Table
 from repro.core import plans as plan_registry
+from repro.core import wirecal
 from repro.cube import CubeRouter, build_cube
 from repro.obs import (
     ExplainReport,
@@ -300,6 +301,9 @@ class TPCHDriver:
         self.seed = seed
         self.backend = backend
         self.wire = wire
+        # machine calibration for EXPLAIN's roofline predictions (persisted
+        # by `python -m repro.core.wirecal`; builtin defaults otherwise)
+        self.wire_cal = wirecal.load()
         # the observability hub: threaded (never global) through routing,
         # lowering and the exchange layer; on by default — pass
         # Observer(enabled=False) to drop tracing (metrics stay live)
@@ -595,18 +599,19 @@ class TPCHDriver:
         rows, sjs, err = [], [], None
         try:
             rows = explain_chain(entry.shape, self.catalog, wire=self.wire,
-                                 binding=binding)
+                                 binding=binding, predict_cal=self.wire_cal)
         except (LoweringError, QueryError) as e:
             err = str(e)
         for r in rows:
             if r["op"] != "SemiJoin":
                 continue
             wf = r["wire"]
-            kind = "packed" if (self.wire == "packed" and wf.packed) else "raw"
+            kind = "packed" if (self.wire != "raw" and wf.packed) else "raw"
             sjs.append(SemiJoinInfo(
                 index=len(sjs), table=r["table"], alt=r["alt"],
                 capacity=r["capacity"], capacity_key=r["capacity_key"],
                 wire_kind=kind, key_bits=wf.key_bits, gamma=r["gamma"],
+                codec_ms=r["codec_ms"], wire_ms=r["wire_ms"],
             ))
         diagnostics = []
         try:
@@ -669,6 +674,12 @@ class TPCHDriver:
         # report reflects what the measured runs did
         observed["overflow_count"] = mreg.value("exchange.overflow")
         observed["compile_events"] = mreg.value("plan.compile_events")
+        # trace-time codec predictions accumulated by the exchange layer
+        # (one record per compiled exchange specialization)
+        for hname in ("exchange.encode_ms", "exchange.decode_ms"):
+            h = mreg.get(hname)
+            if h is not None and h.count:
+                observed[hname] = h.snapshot()
         if ans.tier == 2 and report.plan_error is None:
             try:
                 prof = self._collective_profile(entry)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.wirecal import WireCalibration
 from repro.launch.roofline import CollectiveInstr
 from repro.query.ir import Catalog, ColumnStats, Lit, Param, Q, TableInfo, C
 from repro.query.verify import CollectiveOp, PlanArtifacts
@@ -202,6 +203,20 @@ BAD_PLANS = (
         expected_rule="NUM003",
         query=_request_semijoin("bad_domain"),
         catalog=make_catalog(fact_key_hi=8500),  # keys beyond dim's 8000
+    ),
+    # -- WIRE: wire-choice audit ---------------------------------------------
+    BadPlan(
+        name="packed_forced_despite_latency",
+        expected_rule="WIRE001",
+        query=_request_semijoin("bad_wire"),
+        catalog=_CAT,
+        # a machine where the codec crawls (1 MB/s) but the link flies
+        # (100 GB/s, zero per-message latency): packing costs far more
+        # time than the byte savings recover, yet wire="packed" (the
+        # default override) forces the packed codec anyway
+        kwargs=dict(calibration=WireCalibration(
+            encode_gbps=0.001, decode_gbps=0.001,
+            link_gbps=100.0, msg_ms=0.0, source="fixture")),
     ),
     BadPlan(
         name="float_semijoin_key",

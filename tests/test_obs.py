@@ -15,6 +15,7 @@ EXPLAIN ANALYZE.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 
 import pytest
@@ -302,3 +303,32 @@ def test_sample_trace_artifact(tpch_driver):
     assert "query" in names and "route" in names
     assert all(set(e) >= {"name", "ph", "ts", "pid", "tid"}
                for e in doc["traceEvents"])
+
+
+def test_semijoin_info_describes_roofline_prediction():
+    info = SemiJoinInfo(index=0, table="orders", alt="request", capacity=4096,
+                        capacity_key="sj", wire_kind="packed", key_bits=12,
+                        gamma=0.2, codec_ms=0.143, wire_ms=0.674)
+    s = info.describe()
+    assert "predict codec 0.143ms+wire 0.674ms" in s
+    # without a prediction (or on a local semi-join) the line is unchanged
+    assert "predict" not in dataclasses.replace(info, codec_ms=None).describe()
+    assert "predict" not in dataclasses.replace(info, alt="local").describe()
+
+
+def test_explain_text_renders_codec_histograms():
+    from repro.obs.explain import ExplainReport
+
+    base = dict(query="x", route_tier=2, route_source="x", cache="miss",
+                params={})
+    obs = {"tier": 2, "source": "x", "execute_ms": 1.0, "compile_ms": None,
+           "xla_traces": 0, "overflow": False, "overflow_count": 0,
+           "compile_events": 0,
+           "exchange.encode_ms": {"count": 3, "mean": 0.07},
+           "exchange.decode_ms": {"count": 3, "mean": 0.12}}
+    txt = ExplainReport(**base, observed=obs).text()
+    assert "codec predicted/exchange: encode mean 0.07 ms (n=3), " \
+           "decode mean 0.12 ms (n=3)" in txt
+    # absent histograms (raw wire, cached plan): no codec line at all
+    obs2 = {k: v for k, v in obs.items() if not k.startswith("exchange.")}
+    assert "codec predicted" not in ExplainReport(**base, observed=obs2).text()

@@ -304,3 +304,175 @@ def test_driver_surfaces_hand_plan_overflow(cluster):
 def test_driver_no_overflow_with_derived_capacity(tpch_driver):
     ans = tpch_driver.query("q14")
     assert ans.tier == 2 and not ans.overflow
+
+
+# ---------------------------------------------------------------------------
+# kernel codec parity: Pallas lanes (interpret) == gather-light XLA == ref
+# ---------------------------------------------------------------------------
+
+
+def _synth_buckets(cap, domain, Pn=4, seed=0):
+    """Random sorted per-destination buckets WITH duplicates, plus one
+    empty row and one full row."""
+    rng = np.random.default_rng(seed)
+    buckets = np.zeros((Pn, cap), np.int32)
+    mask = np.zeros((Pn, cap), bool)
+    for d in range(Pn):
+        if d == 0:
+            count = 0                      # empty bucket
+        elif d == 1:
+            count = cap                    # full bucket
+        else:
+            count = int(rng.integers(1, cap + 1))
+        keys = np.sort(rng.integers(0, domain, count)) + d * domain
+        buckets[d, :count] = keys
+        mask[d, :count] = True
+    return jnp.asarray(buckets), jnp.asarray(mask), buckets, mask
+
+
+# widths l = 0, 1, 4, 8 low bits; word-straddling capacities
+_PARITY_SHAPES = [(8, 16), (33, 32), (64, 250), (100, 1000), (96, 4096)]
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("cap,domain", _PARITY_SHAPES)
+def test_ef_codec_impls_word_identical(cap, domain):
+    """All three encoder implementations emit bit-for-bit identical wire
+    words, and every decoder recovers the keys from any of them."""
+    from repro.kernels import ops, wire_codec
+
+    b, m, buckets, mask = _synth_buckets(cap, domain, seed=cap + domain)
+    words = {
+        "ref": ops._ef_encode(b, m, domain=domain, impl="ref"),
+        "xla": ops._ef_encode(b, m, domain=domain, impl="xla"),
+        "pallas": wire_codec.ef_encode(b, m, domain,
+                                       use_pallas=True, interpret=True),
+    }
+    for name in ("xla", "pallas"):
+        np.testing.assert_array_equal(
+            np.asarray(words[name]), np.asarray(words["ref"]), err_msg=name)
+    Pn = b.shape[0]
+    decoders = {
+        "ref": lambda w: ops._ef_decode(w, jnp.int32(0), capacity=cap,
+                                        domain=domain, impl="ref"),
+        "xla": lambda w: ops._ef_decode(w, jnp.int32(0), capacity=cap,
+                                        domain=domain, impl="xla"),
+        "pallas": lambda w: wire_codec.ef_decode(w, cap, domain,
+                                                 jnp.int32(0),
+                                                 use_pallas=True,
+                                                 interpret=True),
+    }
+    offs = buckets - np.arange(Pn)[:, None] * domain
+    for name, dec in decoders.items():
+        keys, got = dec(words["ref"])
+        np.testing.assert_array_equal(np.asarray(got), mask, err_msg=name)
+        np.testing.assert_array_equal(
+            np.where(mask, np.asarray(keys), 0),
+            np.where(mask, offs, 0), err_msg=name)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("cols", [8, 32, 33, 97, 256])
+def test_mask_fold_impls_word_identical(cols):
+    from repro.kernels import ops, ref, wire_codec
+
+    rng = np.random.default_rng(cols)
+    mask = jnp.asarray(rng.random((4, cols)) < 0.5)
+    want = np.asarray(ref.mask_fold(mask))
+    np.testing.assert_array_equal(
+        np.asarray(wire_codec.mask_fold(mask)), want)
+    np.testing.assert_array_equal(
+        np.asarray(wire_codec.mask_fold(mask, use_pallas=True,
+                                        interpret=True)), want)
+    for unfold in (
+        lambda w: ref.mask_unfold(w, cols),
+        lambda w: wire_codec.mask_unfold(w, cols),
+        lambda w: wire_codec.mask_unfold(w, cols, use_pallas=True,
+                                         interpret=True),
+        lambda w: ops.mask_unfold(w, n=cols),
+    ):
+        np.testing.assert_array_equal(np.asarray(unfold(jnp.asarray(want))),
+                                      np.asarray(mask))
+
+
+@pytest.mark.tier1
+def test_use_kernels_toggle_selects_codec_at_call_time():
+    """use_kernels(False) must reroute ef_encode to the ref codec even at
+    shapes the kernel path already traced (impl is a static jit arg, not a
+    baked-in global)."""
+    from repro.kernels import ops
+
+    b, m, *_ = _synth_buckets(64, 250)
+    want = np.asarray(ops._ef_encode(b, m, domain=250, impl="ref"))
+    np.testing.assert_array_equal(np.asarray(ops.ef_encode(b, m, domain=250)),
+                                  want)
+    ops.use_kernels(False)
+    try:
+        np.testing.assert_array_equal(
+            np.asarray(ops.ef_encode(b, m, domain=250)), want)
+    finally:
+        ops.use_kernels(True)
+
+
+# ---------------------------------------------------------------------------
+# latency-aware wire chooser: both directions, from both entry points
+# ---------------------------------------------------------------------------
+
+
+def _slow_codec_cal():
+    from repro.core.wirecal import WireCalibration
+    return WireCalibration(encode_gbps=0.001, decode_gbps=0.001,
+                           link_gbps=100.0, msg_ms=0.0, source="test")
+
+
+def _fast_codec_cal():
+    from repro.core.wirecal import WireCalibration
+    return WireCalibration(encode_gbps=100.0, decode_gbps=100.0,
+                           link_gbps=0.01, msg_ms=0.05, source="test")
+
+
+@pytest.mark.tier1
+def test_latency_chooser_both_directions():
+    """Slow codec + fast network -> raw; fast codec + slow network ->
+    packed.  Byte counts alone would pick packed in BOTH cases."""
+    from repro.core import compression, wirecal
+
+    cap, Pn, domain = 4096, 8, 3750
+    assert compression.alt1_wire_bytes(cap, Pn, domain, packed=True) < \
+        compression.alt1_wire_bytes(cap, Pn, domain, packed=False)
+    assert wirecal.choose_wire_kind(cap, Pn, domain,
+                                    cal=_slow_codec_cal()) == "raw"
+    assert wirecal.choose_wire_kind(cap, Pn, domain,
+                                    cal=_fast_codec_cal()) == "packed"
+
+
+@pytest.mark.tier1
+def test_wire_format_for_auto_follows_calibration():
+    from repro.query.stats import wire_format_for
+
+    wf = wire_format_for(30_000, 8, kind="auto", capacity=4096,
+                         cal=_fast_codec_cal())
+    assert wf.packed
+    wf = wire_format_for(30_000, 8, kind="auto", capacity=4096,
+                         cal=_slow_codec_cal())
+    assert not wf.packed
+
+
+@pytest.mark.tier1
+def test_choose_semijoin_wire_latency_mode():
+    """Latency-accurate alternative selection: the byte-model crossovers
+    survive under the builtin calibration, and a per-message-dominated
+    network tips toward Alt-2's single collective."""
+    import dataclasses
+
+    from repro.core import compression, wirecal
+
+    Pn = 8
+    assert compression.choose_semijoin_wire(
+        64, 10_000_000, Pn, domain=10_000_000 // Pn,
+        cal=wirecal.BUILTIN) == 1
+    assert compression.choose_semijoin_wire(
+        4096, 1_000, Pn, domain=1_000 // Pn, cal=wirecal.BUILTIN) == 2
+    lossy_net = dataclasses.replace(wirecal.BUILTIN, msg_ms=1e9)
+    assert compression.choose_semijoin_wire(
+        64, 10_000_000, Pn, domain=10_000_000 // Pn, cal=lossy_net) == 2
