@@ -67,14 +67,41 @@ class WireCalibration:
 BUILTIN = WireCalibration()
 
 
-def load(path: Optional[str] = None) -> WireCalibration:
-    """Calibration from ``path`` / $REPRO_WIRE_CAL / the default location,
-    falling back to :data:`BUILTIN` when no file exists."""
-    path = path or os.environ.get(ENV_VAR) or DEFAULT_PATH
+class WireCalError(RuntimeError):
+    """An explicitly requested calibration file is missing or unusable.
+
+    Raised only when the caller POINTED at a file (a ``path`` argument or
+    $REPRO_WIRE_CAL): silently planning on builtin GbE rates after the
+    operator stated a machine model would make every wire-format choice
+    quietly wrong.  The implicit default location still falls back to
+    :data:`BUILTIN` — absence there just means "never calibrated"."""
+
+
+def load(path: Optional[str] = None, *,
+         strict: Optional[bool] = None) -> WireCalibration:
+    """Calibration from ``path`` / $REPRO_WIRE_CAL / the default location.
+
+    An EXPLICIT source (argument or env var) that is missing or corrupt
+    raises :class:`WireCalError`; only the implicit default path falls
+    back to :data:`BUILTIN`.  ``strict`` overrides that default (e.g.
+    ``strict=False`` for calibrate-then-overwrite flows where a missing
+    target is the expected fresh-machine state)."""
+    explicit = path or os.environ.get(ENV_VAR)
+    if strict is None:
+        strict = explicit is not None
+    target = explicit or DEFAULT_PATH
     try:
-        with open(path) as f:
+        with open(target) as f:
             return WireCalibration.from_json(json.load(f))
-    except (OSError, ValueError):
+    except (OSError, ValueError, TypeError, AttributeError) as e:
+        if strict:
+            origin = ("argument" if path else f"${ENV_VAR}")
+            kind = ("unreadable" if isinstance(e, OSError)
+                    else "not a calibration JSON object")
+            raise WireCalError(
+                f"wire calibration file {target!r} (from {origin}) is "
+                f"{kind}: {e}"
+            ) from e
         return BUILTIN
 
 
@@ -228,8 +255,12 @@ def main(argv=None) -> int:
     ap.add_argument("--repeat", type=int, default=20)
     ap.add_argument("--out", type=str, default=None)
     args = ap.parse_args(argv)
+    # tolerant load: calibrating INTO a path that doesn't exist yet is the
+    # normal fresh-machine flow, not a misconfiguration — inherit the link
+    # knobs from whatever is there, else builtin
     cal = calibrate(capacity=args.capacity, domain=args.domain,
-                    nodes=args.nodes, repeat=args.repeat, cal=load(args.out))
+                    nodes=args.nodes, repeat=args.repeat,
+                    cal=load(args.out, strict=False))
     path = save(cal, args.out)
     print(f"wrote {path}: encode {cal.encode_gbps:.3f} GB/s, "
           f"decode {cal.decode_gbps:.3f} GB/s, link {cal.link_gbps} GB/s, "

@@ -9,6 +9,14 @@ up front (one distributed scan each) and every cube-covered serving query
 is reported with both its Tier-1 (rollup slice) and Tier-2 (precompiled
 plan) latency, now with p99 tails next to the trimmed-median centers.
 
+--serve runs the continuous-batching engine (``repro.serve.olap_engine``)
+under a concurrent load generator: cubes are built, a mixed
+Tier-1/Tier-2/parameterized request stream is generated
+(``repro.serve.workload``), and the report shows per-class p50/p99
+latency, sustained q/s, and the engine's batching stats.  ``--clients N``
+picks a closed loop (N clients back-to-back); ``--rate QPS`` an open loop
+(Poisson arrivals).
+
 --metrics dumps the driver's metrics registry (tier counters, plan-cache
 hit/miss, latency histograms) on exit; --trace PATH writes the structured
 trace as Chrome-trace JSON loadable in https://ui.perfetto.dev.
@@ -57,6 +65,16 @@ def _lint(d) -> int:
     return 1 if failed else 0
 
 
+def _speedup_str(tier2_s: float, tier1_s: float) -> str:
+    """Tier-2/Tier-1 ratio for the --cubes table.  A trimmed-median Tier-1
+    time can underflow to 0.0 on a fast box (perf_counter granularity vs a
+    sub-microsecond rollup slice) — report ``inf`` instead of crashing the
+    table, and ``--`` when BOTH are 0 (no information either way)."""
+    if tier1_s <= 0.0:
+        return f"{'--':>7s} " if tier2_s <= 0.0 else f"{'inf':>7s}x"
+    return f"{tier2_s / tier1_s:7.0f}x"
+
+
 def _serve_cubes(d, repeat: int):
     from repro.cube.serving import measure_query
     from repro.tpch import cubes as tpch_cubes
@@ -80,7 +98,65 @@ def _serve_cubes(d, repeat: int):
         print(f"{name:>22s} {m['tier1_s']*1e6:10.1f} "
               f"{m['tier1_p99_s']*1e6:9.1f} {m['tier2_s']*1e3:10.2f} "
               f"{m['tier2_p99_s']*1e3:9.2f} "
-              f"{m['tier2_s']/m['tier1_s']:7.0f}x  {m['plan']}")
+              f"{_speedup_str(m['tier2_s'], m['tier1_s'])}  {m['plan']}")
+    return 0
+
+
+def _serve_engine(d, args):
+    """--serve: drive the continuous-batching engine under concurrent
+    load and report per-class latency, throughput, and batching stats."""
+    import asyncio
+
+    from repro.serve import workload as wl
+    from repro.serve.olap_engine import OLAPEngine
+
+    t0 = time.monotonic()
+    d.build_cubes()
+    print(f"tier-1 cubes built in {time.monotonic() - t0:.2f}s")
+    items = wl.mixed_workload(d, args.requests, seed=args.seed)
+    sizes = sorted({2 ** i for i in range(args.max_batch.bit_length())
+                    if 2 ** i <= args.max_batch} | {args.max_batch})
+    t0 = time.monotonic()
+    wl.warm_workload(d, items, batch_sizes=sizes)
+    n_kind = {k: sum(1 for i in items if i.kind == k)
+              for k in ("tier1", "param", "tier2")}
+    print(f"warmed {len({i.prep.shape_key for i in items})} shapes "
+          f"(batch lanes {sizes}) in {time.monotonic() - t0:.2f}s")
+    print(f"workload: {len(items)} requests "
+          f"(tier1 {n_kind['tier1']} / param {n_kind['param']} / "
+          f"tier2 {n_kind['tier2']}), "
+          f"{'open loop @ %g q/s' % args.rate if args.rate else 'closed loop, %d clients' % args.clients}")
+
+    async def go():
+        engine = OLAPEngine(d, max_batch=args.max_batch,
+                            max_wait_us=args.max_wait_us)
+        async with engine:
+            t0 = time.perf_counter()
+            if args.rate:
+                res = await wl.run_open_loop(engine, items,
+                                             rate_qps=args.rate,
+                                             seed=args.seed)
+            else:
+                res = await wl.run_closed_loop(engine, items,
+                                               clients=args.clients)
+            wall = time.perf_counter() - t0
+        return res, wall, engine.stats()
+
+    res, wall, stats = asyncio.run(go())
+    rep = wl.summarize(res, wall)
+    print(f"\n{'class':>8s} {'n':>6s} {'p50[ms]':>9s} {'p95[ms]':>9s} "
+          f"{'p99[ms]':>9s} {'mean[ms]':>9s}")
+    for kind, s in rep["kinds"].items():
+        print(f"{kind:>8s} {s['n']:6d} {s['p50_ms']:9.2f} "
+              f"{s['p95_ms']:9.2f} {s['p99_ms']:9.2f} {s['mean_ms']:9.2f}")
+    bs = stats.get("serve.batch_size", {})
+    print(f"\nsustained: {rep['qps']:.0f} q/s over {wall:.2f}s "
+          f"({rep['failed']} failed)")
+    print(f"batches: {stats['batches']} "
+          f"({stats['coalesced_lanes']} coalesced lanes, "
+          f"mean size {bs.get('mean', 0):.1f}, p95 {bs.get('p95', 0):.0f}); "
+          f"tier1 inline {stats['tier1']}, solo {stats['solo']}, "
+          f"rejected {stats['rejected']}")
     return 0
 
 
@@ -98,6 +174,23 @@ def main(argv=None):
     p.add_argument("--cubes", action="store_true",
                    help="two-tier mode: build rollup cubes, report tier-1 vs "
                         "tier-2 latency per serving query")
+    p.add_argument("--serve", action="store_true",
+                   help="continuous-batching mode: build cubes, run the "
+                        "async serving engine under a concurrent "
+                        "mixed-workload load generator")
+    p.add_argument("--requests", type=int, default=256,
+                   help="--serve: number of requests in the load run")
+    p.add_argument("--clients", type=int, default=16,
+                   help="--serve: closed-loop client count")
+    p.add_argument("--rate", type=float, default=None,
+                   help="--serve: open-loop Poisson arrival rate (q/s); "
+                        "overrides --clients")
+    p.add_argument("--max-batch", type=int, default=16,
+                   help="--serve: continuous-batching lane cap")
+    p.add_argument("--max-wait-us", type=float, default=2000.0,
+                   help="--serve: batching window — a batch launches at "
+                        "max-batch lanes or when its oldest request has "
+                        "waited this long")
     p.add_argument("--metrics", action="store_true",
                    help="print the driver's metrics-registry report on exit")
     p.add_argument("--trace", metavar="PATH", default=None,
@@ -111,12 +204,28 @@ def main(argv=None):
     from repro.core.plans import PLANS
     from repro.tpch.driver import TPCHDriver
 
+    # validate query names BEFORE paying for data generation + placement:
+    # an unknown name used to surface as a bare KeyError from deep inside
+    # the PLANS lookup after the driver was already built
+    if args.queries:
+        unknown = sorted(set(args.queries) - set(PLANS))
+        if unknown:
+            print(f"unknown query name(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            print(f"valid --queries names: {', '.join(sorted(PLANS))}",
+                  file=sys.stderr)
+            return 2
+
     d = TPCHDriver(sf=args.sf, seed=args.seed, backend=args.backend)
     try:
         if args.lint:
             print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
                   f"static plan verify")
             return _lint(d)
+        if args.serve:
+            print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
+                  f"continuous-batching serving")
+            return _serve_engine(d, args)
         if args.cubes:
             print(f"cluster: {d.cluster.num_nodes} nodes | SF {args.sf} | "
                   f"two-tier serving")

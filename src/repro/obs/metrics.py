@@ -12,10 +12,18 @@ Histograms are log-bucketed at ``GROWTH = 2**(1/16)`` per bucket, so any
 reported quantile is within ``sqrt(GROWTH) - 1`` ≈ 2.2% relative error of
 the true order statistic — tight enough for latency gating, bounded
 regardless of the distribution's range.
+
+Every metric is safe to update from multiple threads: the serving tier
+(``repro.serve.olap_engine``) records from the asyncio event loop AND its
+dispatch executor concurrently, so counter increments and histogram
+records are read-modify-write sequences that take a per-metric lock (an
+uncontended ``threading.Lock`` costs tens of nanoseconds — still cheap
+enough to stay on by default).
 """
 from __future__ import annotations
 
 import math
+import threading
 from typing import Mapping, Optional
 
 GROWTH = 2.0 ** (1.0 / 16.0)
@@ -25,14 +33,16 @@ _LOG_G = math.log(GROWTH)
 class Counter:
     """Monotonic named count (queries served, cache hits, overflows)."""
 
-    __slots__ = ("name", "value")
+    __slots__ = ("name", "value", "_lock")
 
     def __init__(self, name: str):
         self.name = name
         self.value = 0
+        self._lock = threading.Lock()
 
     def inc(self, n: int = 1) -> None:
-        self.value += n
+        with self._lock:  # += is a read-modify-write; callers race
+            self.value += n
 
     def snapshot(self):
         return self.value
@@ -65,7 +75,8 @@ class Histogram:
     per the class invariant, independent of how many values were recorded.
     """
 
-    __slots__ = ("name", "buckets", "zeros", "count", "total", "vmin", "vmax")
+    __slots__ = ("name", "buckets", "zeros", "count", "total", "vmin",
+                 "vmax", "_lock")
 
     def __init__(self, name: str):
         self.name = name
@@ -75,20 +86,22 @@ class Histogram:
         self.total = 0.0
         self.vmin = math.inf
         self.vmax = -math.inf
+        self._lock = threading.Lock()
 
     def record(self, v) -> None:
         v = float(v)
-        self.count += 1
-        self.total += v
-        if v < self.vmin:
-            self.vmin = v
-        if v > self.vmax:
-            self.vmax = v
-        if v <= 0.0:
-            self.zeros += 1
-            return
-        idx = int(math.floor(math.log(v) / _LOG_G))
-        self.buckets[idx] = self.buckets.get(idx, 0) + 1
+        with self._lock:
+            self.count += 1
+            self.total += v
+            if v < self.vmin:
+                self.vmin = v
+            if v > self.vmax:
+                self.vmax = v
+            if v <= 0.0:
+                self.zeros += 1
+                return
+            idx = int(math.floor(math.log(v) / _LOG_G))
+            self.buckets[idx] = self.buckets.get(idx, 0) + 1
 
     @property
     def mean(self) -> float:
@@ -135,12 +148,18 @@ class MetricsRegistry:
 
     def __init__(self):
         self._metrics: dict = {}
+        self._lock = threading.Lock()
 
     def _get(self, name: str, cls):
         m = self._metrics.get(name)
         if m is None:
-            m = self._metrics[name] = cls(name)
-        elif type(m) is not cls:
+            # get-or-create must be atomic: two threads registering the
+            # same counter must share ONE object, or increments vanish
+            with self._lock:
+                m = self._metrics.get(name)
+                if m is None:
+                    m = self._metrics[name] = cls(name)
+        if type(m) is not cls:
             raise TypeError(
                 f"metric {name!r} is a {type(m).__name__}, not {cls.__name__}"
             )

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 from collections import deque
 from typing import Optional
@@ -119,6 +120,13 @@ class Observer:
     ``enabled=False`` turns the trace layer off (spans become no-ops and
     nothing is retained) while the metrics registry stays live — counters
     are the always-on tier, traces the on-by-default-but-droppable one.
+
+    The span stack is PER-THREAD: the serving tier records spans from the
+    asyncio event loop and its dispatch executor concurrently, and a
+    shared stack would interleave their push/pop sequences (a worker's
+    ``execute`` span would pop the event loop's half-open request span).
+    Each thread nests independently; completed roots from every thread
+    land in the one shared ``spans`` deque (append is atomic).
     """
 
     def __init__(self, enabled: bool = True,
@@ -126,8 +134,15 @@ class Observer:
         self.enabled = enabled
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.spans: deque = deque(maxlen=MAX_ROOT_SPANS)  # completed roots
-        self._stack: list = []
+        self._tls = threading.local()
         self._epoch = time.perf_counter()
+
+    @property
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
 
     def _now(self) -> float:
         return time.perf_counter() - self._epoch
@@ -152,9 +167,28 @@ class Observer:
         else:
             self.spans.append(ev)
 
+    def open_span(self, name: str, cat: str = "query", **attrs):
+        """Manually managed span for call sites that cannot scope a
+        ``with`` block to one thread's stack — an asyncio task's request
+        span stays open across ``await`` points while OTHER tasks on the
+        same thread open and close theirs, so stack-nested spans would
+        pop in the wrong order.  The returned span is detached (never on
+        any stack); finish it with :meth:`close_span`."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return Span(name=name, cat=cat, t0=self._now(), attrs=dict(attrs))
+
+    def close_span(self, span) -> None:
+        """Finish a span from :meth:`open_span`: stamp its duration and
+        retain it as a root."""
+        if span is _NULL_SPAN or not self.enabled:
+            return
+        span.dur = self._now() - span.t0
+        self.spans.append(span)
+
     def clear(self) -> None:
         self.spans.clear()
-        self._stack.clear()
+        self._tls = threading.local()  # drops every thread's open stack
 
     # -- querying (tests assert on these) -----------------------------------
     def find(self, name: str) -> list:

@@ -1,1 +1,15 @@
 from repro.serve.sampling import distributed_topk_sample, topk_logits  # noqa: F401
+
+# the OLAP serving tier (continuous batching over prepared plans) lives in
+# repro.serve.olap_engine / repro.serve.workload; imported lazily here so
+# `import repro.serve` stays cheap for the sampling-only callers
+__all__ = ["distributed_topk_sample", "topk_logits", "OLAPEngine",
+           "AdmissionError"]
+
+
+def __getattr__(name):
+    if name in ("OLAPEngine", "AdmissionError"):
+        from repro.serve import olap_engine
+
+        return getattr(olap_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

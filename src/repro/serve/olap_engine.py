@@ -1,0 +1,379 @@
+"""Continuous-batching OLAP serving engine: the concurrent-load tier.
+
+Every benchmark before this module measured ONE synchronous client; the
+paper's whole point (and the ROADMAP's north star) is maximal hardware
+utilization under concurrent analytical load.  This engine accepts an
+async stream of query submissions and drives the pieces the repo already
+has — microsecond Tier-1 cube answers, compile-once prepared plans, and
+vmap-batched parameter execution — under a continuous-batching policy
+borrowed from LLM serving (Yu et al.'s ORCA idea, applied to prepared
+OLAP plans):
+
+- **Tier-1 first, inline, never queued.**  ``submit`` probes the cube
+  router synchronously on the event loop (``PreparedQuery.answer_tier1``
+  is pure host-side numpy); a covered, on-edge binding is answered in
+  microseconds without ever entering a queue, so interactive dashboard
+  traffic cannot sit behind a Tier-2 scan.
+
+- **Shape-keyed admission queues.**  Everything else is admitted to a
+  per-shape queue (``PreparedQuery.shape_key`` — same key means the
+  bindings stack into one executable).  Admission is bounded
+  (``max_queue``): past the bound, ``submit`` raises
+  :class:`AdmissionError` instead of growing latency without limit.
+
+- **Dynamic batches.**  A per-shape dispatcher seals a batch when the
+  queue reaches ``max_batch`` OR the oldest request has waited
+  ``max_wait_us``, whichever comes first, and dispatches it through
+  ``execute_batch`` as ONE vmapped SPMD device call.  Late arrivals join
+  the NEXT batch rather than blocking the sealed one — the pipeline
+  stays full under sustained load (Rödiger et al.'s
+  keep-the-network-busy argument, applied to the dispatch path).
+  Batches are padded to power-of-two lane counts so the jitted batched
+  executable specializes O(log max_batch) times, not once per observed
+  size; a batch of one takes the scalar executable (no vmap trace).
+
+- **Bounded dispatch pipelining.**  At most ``max_inflight`` Tier-2
+  dispatches are in flight at once, each on a thread-pool worker — the
+  blocking ``jax`` call releases the GIL while XLA computes, so the
+  event loop keeps admitting and answering Tier-1 during Tier-2 flight.
+  The actual DEVICE executions serialize at the driver's dispatch gate
+  (two XLA host-platform collective programs deadlock if they rendezvous
+  concurrently — see ``TPCHDriver._guarded_call``); what overlaps across
+  workers is the host side: binding casts, parameter stacking, and
+  ``device_get`` of the previous answer while the next batch computes.
+
+Observability: per-request detached spans (``serve.request``), a
+``serve.queue_depth`` gauge, ``serve.batch_size`` / ``serve.queue_us`` /
+``serve.tier1_us`` / ``serve.e2e_us`` histograms and ``serve.*``
+counters, all in the driver's metrics registry (thread-safe as of this
+PR).
+
+Usage::
+
+    engine = OLAPEngine(driver, max_batch=16, max_wait_us=2000)
+    async with engine:
+        ans = await engine.submit(query_or_prepared, params)
+"""
+from __future__ import annotations
+
+import asyncio
+import sys
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro.tpch.driver import PreparedQuery, QueryAnswer
+
+
+class AdmissionError(RuntimeError):
+    """The engine refused a submission (queue bound exceeded, or the
+    engine is not running)."""
+
+
+class _Pending:
+    """One queued Tier-2 request: its full binding, the future its client
+    awaits, and the enqueue timestamp the batching window runs on."""
+
+    __slots__ = ("binding", "future", "t_enq")
+
+    def __init__(self, binding, future, t_enq):
+        self.binding = binding
+        self.future = future
+        self.t_enq = t_enq
+
+
+class _ShapeLane:
+    """Per-shape queue + wakeup event; one dispatcher task drains it."""
+
+    __slots__ = ("prep", "pending", "event", "task")
+
+    def __init__(self, prep: PreparedQuery):
+        self.prep = prep            # canonical handle for this shape
+        self.pending: deque = deque()
+        self.event: asyncio.Event = asyncio.Event()
+        self.task: Optional[asyncio.Task] = None
+
+
+def _lane_view(value, i: int):
+    """Lane ``i`` of a batched answer value (array or dict-of-arrays —
+    every output of ``execute_batch`` carries a leading lane axis)."""
+    if isinstance(value, dict):
+        return {k: np.asarray(v)[i] for k, v in value.items()}
+    return np.asarray(value)[i]
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power of two >= n, capped at ``cap`` — the fixed lane counts
+    batches are padded to."""
+    b = 1
+    while b < n and b < cap:
+        b <<= 1
+    return min(b, cap)
+
+
+class OLAPEngine:
+    """Async serving loop over one :class:`~repro.tpch.driver.TPCHDriver`.
+
+    Construct, then ``async with engine:`` (or ``await engine.start()`` /
+    ``await engine.stop()``).  ``submit`` may be called from any task on
+    the engine's event loop; the underlying driver is thread-safe, so a
+    separate synchronous client hitting the same driver concurrently is
+    also supported.
+    """
+
+    def __init__(self, driver, *, max_batch: int = 16,
+                 max_wait_us: float = 2000.0, max_queue: int = 4096,
+                 max_inflight: int = 2, pad_batches: bool = True):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.driver = driver
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_us) * 1e-6
+        self.max_queue = int(max_queue)
+        self.max_inflight = int(max_inflight)
+        self.pad_batches = bool(pad_batches)
+        self.obs = driver.obs
+        self._lanes: dict = {}      # shape_key -> _ShapeLane
+        self._depth = 0             # queued Tier-2 requests, all lanes
+        self._active = 0            # Tier-2 dispatches in flight
+        self._running = False
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._sem: Optional[asyncio.Semaphore] = None
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    async def start(self) -> "OLAPEngine":
+        if self._running:
+            return self
+        self._loop = asyncio.get_running_loop()
+        self._sem = asyncio.Semaphore(self.max_inflight)
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.max_inflight + 1,
+            thread_name_prefix="olap-serve")
+        # the Tier-1 inline path is ~100us of numpy on the event loop; at
+        # the interpreter's default 5ms GIL switch interval one busy
+        # executor thread (host-side batch stacking) may hold the GIL for
+        # ~50x the whole path — bound the worst-case hold while serving,
+        # restore on stop
+        self._switch_interval = sys.getswitchinterval()
+        sys.setswitchinterval(2e-4)
+        self._running = True
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Stop the engine.  ``drain=True`` (default) first waits for every
+        queued request and in-flight batch to complete; ``drain=False``
+        fails queued requests with :class:`AdmissionError`."""
+        if not self._running:
+            return
+        if drain:
+            while self._depth or self._active:
+                await asyncio.sleep(0.0005)
+        self._running = False
+        for lane in self._lanes.values():
+            if lane.task is not None:
+                lane.task.cancel()
+            lane.event.set()
+        for lane in self._lanes.values():
+            if lane.task is not None:
+                try:
+                    await lane.task
+                except asyncio.CancelledError:
+                    pass
+                lane.task = None
+            while lane.pending:
+                p = lane.pending.popleft()
+                self._depth -= 1
+                if not p.future.done():
+                    p.future.set_exception(
+                        AdmissionError("engine stopped with request queued"))
+        self._gauge_depth()
+        self._pool.shutdown(wait=True)
+        self._pool = None
+        sys.setswitchinterval(self._switch_interval)
+
+    async def __aenter__(self) -> "OLAPEngine":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=exc == (None, None, None))
+
+    # -- submission ---------------------------------------------------------
+    def prepare(self, q) -> PreparedQuery:
+        """Prepare once, submit many: the returned handle skips per-submit
+        canonicalization and is the coalescing key."""
+        return self.driver.prepare(q)
+
+    async def submit(self, q, params: Optional[dict] = None) -> QueryAnswer:
+        """Serve one query: a :class:`~repro.query.Query` (prepared here)
+        or a :class:`PreparedQuery` handle, plus an optional binding.
+
+        Cube-covered on-edge bindings return synchronously (Tier 1);
+        everything else resolves when its (possibly coalesced) Tier-2
+        dispatch lands.  Raises :class:`AdmissionError` when the engine
+        is stopped or the shape's queue is at ``max_queue``.
+        """
+        if not self._running:
+            raise AdmissionError("engine is not running (use 'async with')")
+        mreg = self.obs.metrics
+        mreg.counter("serve.requests").inc()
+        t0 = time.perf_counter()
+        prep = q if isinstance(q, PreparedQuery) else self.driver.prepare(q)
+        if not isinstance(prep, PreparedQuery):  # pragma: no cover
+            raise TypeError(f"submit() takes a Query or PreparedQuery, "
+                            f"got {type(q)}")
+        sp = self.obs.open_span("serve.request", cat="serve",
+                                source=prep.source)
+        try:
+            b = prep.binding(params)
+            ans = prep.answer_tier1(b)
+            if ans is not None:
+                dt_us = (time.perf_counter() - t0) * 1e6
+                mreg.counter("serve.tier1").inc()
+                mreg.histogram("serve.tier1_us").record(dt_us)
+                sp.set(tier=1, route=ans.source)
+                return ans
+            if not prep.params:
+                # literal shape: nothing to stack on — dispatch solo
+                ans = await self._run_solo(prep, sp)
+            else:
+                ans = await self._enqueue(prep, b, t0, sp)
+            mreg.histogram("serve.e2e_us").record(
+                (time.perf_counter() - t0) * 1e6)
+            return ans
+        except BaseException:
+            sp.set(error=True)
+            raise
+        finally:
+            self.obs.close_span(sp)
+
+    # -- internals ----------------------------------------------------------
+    def _gauge_depth(self) -> None:
+        self.obs.metrics.gauge("serve.queue_depth").set(self._depth)
+
+    async def _run_solo(self, prep: PreparedQuery, sp) -> QueryAnswer:
+        self.obs.metrics.counter("serve.solo").inc()
+        await self._sem.acquire()
+        self._active += 1
+        try:
+            ans = await self._loop.run_in_executor(self._pool, prep.execute)
+        finally:
+            self._active -= 1
+            self._sem.release()
+        sp.set(tier=ans.tier, route=ans.source)
+        return ans
+
+    async def _enqueue(self, prep: PreparedQuery, binding: dict,
+                       t0: float, sp) -> QueryAnswer:
+        if self._depth >= self.max_queue:
+            self.obs.metrics.counter("serve.rejected").inc()
+            raise AdmissionError(
+                f"admission queue full ({self._depth} >= {self.max_queue})")
+        lane = self._lanes.get(prep.shape_key)
+        if lane is None:
+            lane = self._lanes[prep.shape_key] = _ShapeLane(prep)
+            lane.task = self._loop.create_task(self._dispatch_loop(lane))
+        p = _Pending(binding, self._loop.create_future(), t0)
+        lane.pending.append(p)
+        self._depth += 1
+        self._gauge_depth()
+        lane.event.set()
+        ans = await p.future
+        sp.set(tier=ans.tier, route=ans.source,
+               queue_us=(p.t_enq and (time.perf_counter() - p.t_enq) * 1e6))
+        return ans
+
+    async def _dispatch_loop(self, lane: _ShapeLane) -> None:
+        """One shape's continuous-batching loop: wait for work, hold the
+        batching window open until ``max_batch`` or ``max_wait_us``, seal,
+        dispatch without awaiting (late arrivals accumulate for the next
+        batch while this one flies)."""
+        while self._running:
+            if not lane.pending:
+                lane.event.clear()
+                await lane.event.wait()
+                continue
+            deadline = lane.pending[0].t_enq + self.max_wait_s
+            while len(lane.pending) < self.max_batch:
+                delay = deadline - time.perf_counter()
+                if delay <= 0:
+                    break
+                lane.event.clear()
+                try:
+                    await asyncio.wait_for(lane.event.wait(), delay)
+                except asyncio.TimeoutError:
+                    break
+            n = min(len(lane.pending), self.max_batch)
+            batch = [lane.pending.popleft() for _ in range(n)]
+            await self._sem.acquire()  # bounds device concurrency
+            self._active += 1
+            self._depth -= n
+            self._gauge_depth()
+            # fire-and-continue: the loop seals the next batch while this
+            # one executes (the semaphore is released by _run_batch)
+            self._loop.create_task(self._run_batch(lane, batch))
+
+    async def _run_batch(self, lane: _ShapeLane, batch: list) -> None:
+        mreg = self.obs.metrics
+        try:
+            t_disp = time.perf_counter()
+            for p in batch:
+                mreg.histogram("serve.queue_us").record(
+                    (t_disp - p.t_enq) * 1e6)
+            mreg.histogram("serve.batch_size").record(len(batch))
+            mreg.counter("serve.batches").inc()
+            prep, rows = lane.prep, [p.binding for p in batch]
+            pad = (_bucket(len(rows), self.max_batch)
+                   if self.pad_batches else None)
+
+            def work():
+                if len(rows) == 1:
+                    return prep.execute(rows[0])
+                return prep.execute_batch(rows, pad_to=pad)
+
+            try:
+                ans = await self._loop.run_in_executor(self._pool, work)
+            except BaseException as e:
+                for p in batch:
+                    if not p.future.done():
+                        p.future.set_exception(e)
+                return
+            if len(batch) == 1:
+                if not batch[0].future.done():
+                    batch[0].future.set_result(ans)
+                return
+            mreg.counter("serve.coalesced_lanes").inc(len(batch))
+            overflow = np.asarray(ans.overflow)
+            for i, p in enumerate(batch):
+                if p.future.done():
+                    continue
+                p.future.set_result(QueryAnswer(
+                    _lane_view(ans.value, i), tier=ans.tier,
+                    source=ans.source, overflow=bool(overflow[i])))
+        finally:
+            self._active -= 1
+            self._sem.release()
+
+    # -- introspection ------------------------------------------------------
+    def stats(self) -> dict:
+        """Live snapshot of the serving metrics (plain data)."""
+        mreg = self.obs.metrics
+        out = {
+            "requests": mreg.value("serve.requests"),
+            "tier1": mreg.value("serve.tier1"),
+            "solo": mreg.value("serve.solo"),
+            "batches": mreg.value("serve.batches"),
+            "coalesced_lanes": mreg.value("serve.coalesced_lanes"),
+            "rejected": mreg.value("serve.rejected"),
+            "queue_depth": self._depth,
+            "lanes": len(self._lanes),
+        }
+        for h in ("serve.batch_size", "serve.queue_us", "serve.tier1_us",
+                  "serve.e2e_us"):
+            m = mreg.get(h)
+            if m is not None and m.count:
+                out[h] = m.snapshot()
+        return out

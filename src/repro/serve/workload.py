@@ -1,0 +1,224 @@
+"""Serving workload + load generators for the continuous-batching tier.
+
+One definition of "a mixed Tier-1/Tier-2/parameterized request stream",
+shared by ``launch/serve_olap.py --serve`` and
+``benchmarks/serving_load.py`` so the interactive report and the CI gate
+measure the same thing:
+
+- ``tier1``  cube-covered serving queries on their on-edge default
+  bindings (``repro.tpch.queries.SERVING_QUERIES``) — the microsecond
+  router path, the traffic whose tail latency must survive load;
+- ``param``  TPC-H §2.4 substitution draws of the parameterized forms
+  (``PARAM_QUERIES``; Q6/Q14 by default — the dispatch-bound shapes
+  continuous batching helps most), each request a distinct binding of a
+  shared prepared shape;
+- ``tier2``  the off-edge Q1 variant (``uncovered_query``) — misses every
+  cube and runs the compiled SPMD plan.
+
+Every item carries a PREPARED handle (built once per distinct shape), so
+a request is "submit this binding", not "re-canonicalize this tree" —
+the paper's compile-once serving model.
+
+Two generator disciplines:
+
+- ``run_closed_loop``: N clients, each submitting its next request the
+  moment the previous answer lands — measures saturated throughput;
+- ``run_open_loop``: Poisson arrivals at a target rate, independent of
+  completion — measures latency at a controlled load level (the
+  open-vs-closed distinction matters: a closed loop cannot observe
+  queueing collapse).
+
+``sequential_baseline`` replays the same items on one synchronous client
+(prepared ``execute`` per request) — the pre-engine status quo the
+throughput gate compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.tpch import queries as tq
+from repro.tpch.driver import PreparedQuery
+
+DEFAULT_MIX = {"param": 0.6, "tier1": 0.3, "tier2": 0.1}
+PARAM_NAMES = ("q6", "q14_promo")  # dispatch-bound shapes: batching wins
+
+
+@dataclasses.dataclass
+class WorkItem:
+    """One request of the stream: a prepared handle plus its binding."""
+
+    kind: str                  # "tier1" | "param" | "tier2"
+    name: str                  # query label for reporting
+    prep: PreparedQuery
+    binding: Optional[dict]    # None -> the prepared defaults
+
+
+@dataclasses.dataclass
+class Completion:
+    """One served request: the answer and its client-observed latency."""
+
+    item: WorkItem
+    latency_s: float
+    answer: object             # QueryAnswer (or the raised exception)
+    ok: bool = True
+
+
+def mixed_workload(driver, n: int, *, seed: int = 0, mix=None,
+                   param_names: Sequence[str] = PARAM_NAMES) -> list:
+    """Build ``n`` work items in the given kind mix (shuffled, seeded).
+
+    Shapes are prepared once up front; ``param`` items draw random §2.4
+    substitution bindings (distinct per request), ``tier1``/``tier2``
+    items run their query's default binding.
+    """
+    rng = np.random.default_rng(seed)
+    mix = dict(DEFAULT_MIX if mix is None else mix)
+    total = sum(mix.values())
+
+    tier1 = [(name, driver.prepare(make()))
+             for name, make in tq.SERVING_QUERIES.items()]
+    # keep only the shapes the router actually covers on their defaults —
+    # the tier1 class must measure the microsecond path, not a mislabel
+    tier1 = [(name, prep) for name, prep in tier1
+             if prep.answer_tier1(prep.binding()) is not None]
+    if not tier1:
+        raise RuntimeError("no cube-covered serving query: call "
+                           "driver.build_cubes() before mixed_workload()")
+    params = {name: driver.prepare(tq.PARAM_QUERIES[name]())
+              for name in param_names}
+    tier2 = driver.prepare(tq.uncovered_query())
+
+    kinds = list(mix)
+    probs = np.asarray([mix[k] / total for k in kinds])
+    items = []
+    for i in range(n):
+        kind = kinds[int(rng.choice(len(kinds), p=probs))]
+        if kind == "tier1":
+            name, prep = tier1[int(rng.integers(len(tier1)))]
+            items.append(WorkItem("tier1", name, prep, None))
+        elif kind == "param":
+            name = param_names[int(rng.integers(len(param_names)))]
+            items.append(WorkItem("param", name, params[name],
+                                  tq.random_binding(name, rng)))
+        elif kind == "tier2":
+            items.append(WorkItem("tier2", "q1_offedge", tier2, None))
+        else:
+            raise ValueError(f"unknown workload kind {kind!r}")
+    return items
+
+
+def warm_workload(driver, items, *, batch_sizes=()) -> None:
+    """Pay every XLA compile up front so a load run measures steady-state
+    serving, not compilation: one scalar execute per distinct shape, plus
+    one batched execute per (parameterized shape, lane count) in
+    ``batch_sizes`` — the padded bucket sizes the engine will dispatch."""
+    seen = {}
+    for it in items:
+        seen.setdefault(it.prep.shape_key, it)
+    for it in seen.values():
+        it.prep.execute(it.binding)
+        if it.prep.params:
+            for b in batch_sizes:
+                if b > 1:
+                    rows = [it.binding or {}] * b
+                    it.prep.execute_batch(rows)
+
+
+# -- generators -------------------------------------------------------------
+
+
+async def run_closed_loop(engine, items, *, clients: int = 8) -> list:
+    """N clients, each submitting its next item as soon as the previous
+    completes.  Returns one :class:`Completion` per item, in item order."""
+    import asyncio
+
+    results = [None] * len(items)
+    queue = list(enumerate(items))
+    pos = 0
+
+    async def client():
+        nonlocal pos
+        while pos < len(queue):
+            idx, item = queue[pos]
+            pos += 1
+            results[idx] = await _submit_one(engine, item)
+
+    await asyncio.gather(*[client() for _ in range(max(1, clients))])
+    return results
+
+
+async def run_open_loop(engine, items, *, rate_qps: float,
+                        seed: int = 0) -> list:
+    """Poisson arrivals at ``rate_qps``: each item is launched at its
+    arrival time whether or not earlier requests finished (the open-loop
+    discipline that can actually observe queueing delay)."""
+    import asyncio
+
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_qps, size=len(items))
+    tasks = []
+    for item, gap in zip(items, gaps):
+        tasks.append(asyncio.ensure_future(_submit_one(engine, item)))
+        await asyncio.sleep(float(gap))
+    return list(await asyncio.gather(*tasks))
+
+
+async def _submit_one(engine, item) -> Completion:
+    t0 = time.perf_counter()
+    try:
+        ans = await engine.submit(item.prep, item.binding)
+    except Exception as e:  # admission rejects land in the report, not up
+        return Completion(item, time.perf_counter() - t0, e, ok=False)
+    return Completion(item, time.perf_counter() - t0, ans)
+
+
+def sequential_baseline(driver, items) -> list:
+    """The pre-engine serving model: ONE synchronous client, prepared
+    ``execute`` per request, no coalescing.  Same Completion schema as
+    the generators so reports and parity checks share code."""
+    out = []
+    for item in items:
+        t0 = time.perf_counter()
+        ans = item.prep.execute(item.binding)
+        out.append(Completion(item, time.perf_counter() - t0, ans))
+    return out
+
+
+# -- reporting --------------------------------------------------------------
+
+
+def percentile(xs, q: float) -> float:
+    """Exact order-statistic percentile (the load reports gate on tails,
+    so no log-bucket approximation here)."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def summarize(completions, wall_s: float) -> dict:
+    """Per-kind latency percentiles + overall sustained q/s."""
+    ok = [c for c in completions if c.ok]
+    by_kind = {}
+    for c in ok:
+        by_kind.setdefault(c.item.kind, []).append(c.latency_s)
+    out = {
+        "requests": len(completions),
+        "failed": len(completions) - len(ok),
+        "wall_s": wall_s,
+        "qps": len(ok) / wall_s if wall_s > 0 else 0.0,
+        "kinds": {},
+    }
+    for kind, lats in sorted(by_kind.items()):
+        out["kinds"][kind] = {
+            "n": len(lats),
+            "p50_ms": percentile(lats, 0.50) * 1e3,
+            "p95_ms": percentile(lats, 0.95) * 1e3,
+            "p99_ms": percentile(lats, 0.99) * 1e3,
+            "mean_ms": sum(lats) / len(lats) * 1e3,
+        }
+    return out

@@ -32,6 +32,7 @@ surfaces any binding that exceeds them.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Mapping, Optional
 
@@ -98,7 +99,15 @@ class _PlanEntry:
     """One cached prepared SHAPE: the parameterized canonical query, its
     ordered parameter signature, and the lazily compiled executables
     (scalar + vmap-batched).  Shared by every query that canonicalizes to
-    this shape — the compile happens once."""
+    this shape — the compile happens once.
+
+    ``lock``/``warm`` serialize the FIRST call of each compiled
+    specialization: ``jax.jit`` defers the XLA trace to the first call,
+    so two threads racing into an un-warmed executable would both pay the
+    trace (and double-count ``compile_events``).  Once a specialization
+    ("scalar" or ``("batch", B)``) is in ``warm``, calls skip the entry
+    lock (execution itself is serialized by the driver's dispatch gate —
+    see ``TPCHDriver._guarded_call``)."""
 
     def __init__(self, shape: Query, stats_binding: dict):
         self.shape = shape
@@ -111,6 +120,8 @@ class _PlanEntry:
         self.route = (None, None)  # (router identity, Match|None) memo
         self.semijoins = ()     # static semi-join decisions of the lowering
         self.profile = None     # lazy HLO CollectiveStats (explain_analyze)
+        self.lock = threading.Lock()  # guards lazy compile + first trace
+        self.warm = set()       # specializations already traced once
 
 
 class PreparedQuery:
@@ -142,6 +153,15 @@ class PreparedQuery:
     @property
     def query(self) -> Query:
         return self.entry.shape
+
+    @property
+    def shape_key(self) -> int:
+        """Identity of the prepared shape: two handles carry the same key
+        iff they share one ``_PlanEntry`` (and therefore one compiled
+        executable).  The serving engine coalesces submissions by this
+        key — same key means their bindings can stack into one
+        ``execute_batch`` dispatch."""
+        return id(self.entry)
 
     # -- binding ------------------------------------------------------------
     def binding(self, params=None) -> dict:
@@ -182,7 +202,14 @@ class PreparedQuery:
                 for p in self.entry.params}
 
     # -- execution ----------------------------------------------------------
-    def _tier1(self, b: dict) -> Optional[QueryAnswer]:
+    def answer_tier1(self, b: dict) -> Optional[QueryAnswer]:
+        """Tier-1 (rollup cube) answer for a FULL binding, or None when no
+        cube covers this shape or the binding is off-edge/out-of-range.
+        This is the serving engine's microsecond admission probe: pure
+        host-side numpy, no device dispatch, safe to call inline on the
+        event loop (the route match is memoized per entry; the
+        re-assignment is an atomic tuple store, so concurrent probes at
+        worst redo the match)."""
         router = self.driver.router
         if router is None:
             return None
@@ -196,6 +223,8 @@ class PreparedQuery:
             return None
         value = np.asarray(value).reshape(-1, value.shape[-1])
         return QueryAnswer(value, tier=1, source=match.route.cube.spec.name)
+
+    _tier1 = answer_tier1
 
     def _tier2_fn(self):
         try:
@@ -224,8 +253,12 @@ class PreparedQuery:
             fn = self._tier2_fn()
             cols = self.driver._columns()
             with obs.span("execute", cat="exec"):
-                out = fn(cols, self._cast(b)) if self.entry.params \
-                    else fn(cols)
+                if self.entry.params:
+                    out = self.driver._guarded_call(
+                        self.entry, "scalar", fn, cols, self._cast(b))
+                else:
+                    out = self.driver._guarded_call(
+                        self.entry, "scalar", fn, cols)
                 out = jax.device_get(out)
             overflow = bool(np.asarray(out.pop("overflow", False)))
             value = out["value"] if set(out) == {"value"} else out
@@ -238,14 +271,23 @@ class PreparedQuery:
             return QueryAnswer(value, tier=2, source=self.source,
                                overflow=overflow)
 
-    def execute_batch(self, param_table) -> QueryAnswer:
+    def execute_batch(self, param_table, pad_to: Optional[int] = None
+                      ) -> QueryAnswer:
         """Run many bindings of this prepared shape as ONE vmapped SPMD
         dispatch.  ``param_table`` is a mapping name -> length-B sequence
         (missing names fall back to the defaults) or a sequence of B
         binding dicts.  Every output gains a leading lane axis; the
         ``overflow`` flag comes back per lane.  Batches always run the
         compiled Tier-2 plan (Tier-1 exactness is a per-binding decision —
-        route single executions for that)."""
+        route single executions for that).
+
+        ``pad_to`` pads the batch to a fixed lane count by repeating the
+        last binding (outputs are sliced back to the real B).  The jitted
+        batched executable re-specializes per DISTINCT lane count, so a
+        continuous-batching caller whose batch sizes vary per tick pads
+        to a few fixed bucket sizes instead of tracing one executable per
+        observed size; the wasted duplicate lanes are counted in the
+        ``driver.batch_pad_lanes`` metric."""
         if not self.entry.params:
             raise QueryError(
                 f"prepared query {self.source!r} has no parameters — "
@@ -266,22 +308,33 @@ class PreparedQuery:
         if B == 0:
             raise QueryError("execute_batch needs at least one binding")
         merged = [self.binding(r) for r in rows]
+        obs = self.driver.obs
+        mreg = obs.metrics
+        lanes = B
+        if pad_to is not None and pad_to > B:
+            merged = merged + [merged[-1]] * (pad_to - B)
+            lanes = pad_to
+            mreg.counter("driver.batch_pad_lanes").inc(pad_to - B)
         stacked = {
             p.name: jnp.asarray(np.asarray([m[p.name] for m in merged],
                                            np.dtype(p.dtype)))
             for p in self.entry.params
         }
-        obs = self.driver.obs
-        mreg = obs.metrics
-        with obs.span("query.batch", source=self.source, lanes=B) as sp:
+        with obs.span("query.batch", source=self.source, lanes=B,
+                      padded=lanes) as sp:
             self._tier2_fn()  # surface LoweringError as UncoveredQueryError
             fn = self.driver._ensure_batched(self.entry)
             with obs.span("execute", cat="exec"):
-                out = jax.device_get(fn(self.driver._columns(), stacked))
+                out = jax.device_get(self.driver._guarded_call(
+                    self.entry, ("batch", lanes), fn,
+                    self.driver._columns(), stacked))
             overflow = out.pop("overflow", None)
-            overflow = (np.zeros(B, bool) if overflow is None
+            overflow = (np.zeros(lanes, bool) if overflow is None
                         else np.asarray(overflow))
             value = out["value"] if set(out) == {"value"} else out
+            if lanes != B:  # drop the padding lanes from every output
+                value = jax.tree.map(lambda a: a[:B], value)
+                overflow = overflow[:B]
             n_ovf = int(np.asarray(overflow).sum())
             sp.set(tier=2, overflow_lanes=n_ovf)
             mreg.counter("driver.batch").inc()
@@ -326,6 +379,21 @@ class TPCHDriver:
         )
         self._compiled = {}       # registry name -> compiled hand plan
         self._prepared = {}       # STRUCTURAL shape key -> _PlanEntry (LRU)
+        # one lock for every cache the driver mutates (_compiled,
+        # _prepared + its LRU order, per-entry bound-closure LRUs): the
+        # serving tier calls prepare()/query() from the event loop and
+        # executor threads concurrently.  Reentrant because prepare() is
+        # reached from compile()/compile_query() which may already hold it.
+        self._lock = threading.RLock()
+        # Device executions are globally serialized: XLA's host-platform
+        # collectives rendezvous on the 8 shared device threads, so TWO
+        # multi-device programs dispatched concurrently each wait for all
+        # of their participants and neither set can assemble (observed as
+        # "waiting for all participants to arrive at rendezvous" hangs).
+        # One dispatch at a time is also the honest model of one shared
+        # cluster — concurrency comes from batching lanes into a dispatch,
+        # not from overlapping dispatches.
+        self._dispatch_gate = threading.Lock()
         self._profiling = False   # True while explain_analyze dumps HLO —
                                   # that re-trace is an artifact, not a
                                   # compile event
@@ -349,21 +417,40 @@ class TPCHDriver:
     def _columns(self):
         return {n: t.columns for n, t in self.placed.items()}
 
+    def _guarded_call(self, entry, key, fn, *args):
+        """Run one device dispatch of ``entry``'s specialization ``key``.
+
+        Two separate serializations, both required for threaded callers:
+        the FIRST call per specialization holds ``entry.lock`` so exactly
+        one thread pays the deferred XLA trace, and EVERY call holds the
+        driver's ``_dispatch_gate`` so two collective programs never
+        rendezvous concurrently on the shared host-platform devices (see
+        the gate's comment in ``__init__``)."""
+        if key in entry.warm:
+            with self._dispatch_gate:
+                return fn(*args)
+        with entry.lock:
+            with self._dispatch_gate:
+                out = fn(*args)
+            entry.warm.add(key)
+            return out
+
     # -- physical layer (hand plans / lowered IR by registry name) ---------
     def compile(self, name: str):
         """Compiled plan for a registered query: the hand-written physical
         plan when one exists, else the lowered IR (shared with the
         structural query cache — one executable per query)."""
-        if name not in self._compiled:
-            entry = plan_registry.get(name)
-            if entry.plan is not None:
-                self._compiled[name] = self.cluster.compile(
-                    entry.plan, self.ctx, self.placed)
-            elif entry.ir is not None:
-                self._compiled[name] = self.compile_query(entry.ir)
-            else:  # pragma: no cover — registry invariant
-                raise LoweringError(f"{name!r} has neither plan nor IR")
-        return self._compiled[name]
+        with self._lock:
+            if name not in self._compiled:
+                entry = plan_registry.get(name)
+                if entry.plan is not None:
+                    self._compiled[name] = self.cluster.compile(
+                        entry.plan, self.ctx, self.placed)
+                elif entry.ir is not None:
+                    self._compiled[name] = self.compile_query(entry.ir)
+                else:  # pragma: no cover — registry invariant
+                    raise LoweringError(f"{name!r} has neither plan nor IR")
+            return self._compiled[name]
 
     def run(self, name: str):
         return self.compile(name)(self._columns())
@@ -410,17 +497,22 @@ class TPCHDriver:
         shape, defaults = parameterize(q, obs=self.obs)
         source = q.name or "<lowered-ir>"
         key = repr(shape.root)  # structural; same_query guards collisions
-        hit = self._prepared.get(key)
-        if hit is not None and same_query(hit.shape, shape):
-            self._prepared[key] = self._prepared.pop(key)  # LRU touch
-            self.obs.metrics.counter("plan_cache.hit").inc()
-            return PreparedQuery(self, hit, defaults, source, cache_hit=True)
-        entry = _PlanEntry(shape, stats_binding=defaults)
-        self._prepared[key] = entry
-        while len(self._prepared) > self.IR_CACHE_MAX:
-            self._prepared.pop(next(iter(self._prepared)))
-        self.obs.metrics.counter("plan_cache.miss").inc()
-        return PreparedQuery(self, entry, defaults, source)
+        # lookup-or-insert is atomic: two threads preparing the same shape
+        # concurrently must converge on ONE entry (one miss, one hit), or
+        # each would compile its own executable
+        with self._lock:
+            hit = self._prepared.get(key)
+            if hit is not None and same_query(hit.shape, shape):
+                self._prepared[key] = self._prepared.pop(key)  # LRU touch
+                self.obs.metrics.counter("plan_cache.hit").inc()
+                return PreparedQuery(self, hit, defaults, source,
+                                     cache_hit=True)
+            entry = _PlanEntry(shape, stats_binding=defaults)
+            self._prepared[key] = entry
+            while len(self._prepared) > self.IR_CACHE_MAX:
+                self._prepared.pop(next(iter(self._prepared)))
+            self.obs.metrics.counter("plan_cache.miss").inc()
+            return PreparedQuery(self, entry, defaults, source)
 
     def _lowered_plan(self, entry: _PlanEntry, label: str,
                       batched: bool = False):
@@ -458,19 +550,24 @@ class TPCHDriver:
 
     def _ensure_compiled(self, entry: _PlanEntry):
         if entry.fn is None:
-            label = entry.shape.name or "<lowered-ir>"
-            with self.obs.span("lower", cat="plan", label=label):
-                entry.fn = self.cluster.compile(
-                    self._lowered_plan(entry, label), self.ctx, self.placed)
+            with entry.lock:  # double-checked: lower+jit-wrap once
+                if entry.fn is None:
+                    label = entry.shape.name or "<lowered-ir>"
+                    with self.obs.span("lower", cat="plan", label=label):
+                        entry.fn = self.cluster.compile(
+                            self._lowered_plan(entry, label),
+                            self.ctx, self.placed)
         return entry.fn
 
     def _ensure_batched(self, entry: _PlanEntry):
         if entry.batched_fn is None:
-            label = f"{entry.shape.name or '<lowered-ir>'}@batch"
-            with self.obs.span("lower", cat="plan", label=label):
-                entry.batched_fn = self.cluster.compile(
-                    self._lowered_plan(entry, label, batched=True),
-                    self.ctx, self.placed, batch=True)
+            with entry.lock:
+                if entry.batched_fn is None:
+                    label = f"{entry.shape.name or '<lowered-ir>'}@batch"
+                    with self.obs.span("lower", cat="plan", label=label):
+                        entry.batched_fn = self.cluster.compile(
+                            self._lowered_plan(entry, label, batched=True),
+                            self.ctx, self.placed, batch=True)
         return entry.batched_fn
 
     def compile_query(self, q: Query):
@@ -487,18 +584,19 @@ class TPCHDriver:
             return fn
         b = prep.binding()
         key = tuple(sorted(b.items()))
-        if key in entry.bound:
-            entry.bound[key] = entry.bound.pop(key)  # LRU touch
-        else:
-            pvals = prep._cast(b)
-            entry.bound[key] = (
-                lambda columns, _fn=fn, _pv=pvals: _fn(columns, _pv))
-            # closures hold device scalars; a literal-streaming caller
-            # must not grow this without bound (the executable is shared
-            # regardless — evicted bindings just rebuild a closure)
-            while len(entry.bound) > self.BOUND_CACHE_MAX:
-                entry.bound.pop(next(iter(entry.bound)))
-        return entry.bound[key]
+        with self._lock:
+            if key in entry.bound:
+                entry.bound[key] = entry.bound.pop(key)  # LRU touch
+            else:
+                pvals = prep._cast(b)
+                entry.bound[key] = (
+                    lambda columns, _fn=fn, _pv=pvals: _fn(columns, _pv))
+                # closures hold device scalars; a literal-streaming caller
+                # must not grow this without bound (the executable is shared
+                # regardless — evicted bindings just rebuild a closure)
+                while len(entry.bound) > self.BOUND_CACHE_MAX:
+                    entry.bound.pop(next(iter(entry.bound)))
+            return entry.bound[key]
 
     # -- two-tier execution (repro.cube) -----------------------------------
     def build_cubes(self, specs=None):

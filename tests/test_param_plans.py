@@ -294,6 +294,72 @@ def test_bound_closure_cache_is_lru_bounded(cluster):
     assert driver.compile_events == ["q6"]     # ... but ONE executable
 
 
+def _q6_variant(extra_cols):
+    """A q6-shaped tree with one extra conjunct per column in
+    ``extra_cols`` — each distinct column SET is a distinct structure
+    (literal values alone would canonicalize to the same shape)."""
+    cond = ((C("l_shipdate") >= DP.q6_date_min)
+            & (C("l_shipdate") < DP.q6_date_max)
+            & (C("l_discount") >= DP.q6_disc_min)
+            & (C("l_discount") <= DP.q6_disc_max)
+            & (C("l_quantity") < DP.q6_quantity))
+    for col in extra_cols:
+        cond = cond & (C(col) >= 0.0)
+    return (Q.scan("lineitem").filter(cond)
+            .group_agg(aggs=[("revenue", "sum",
+                              C("l_extendedprice") * C("l_discount"))]))
+
+
+def test_prepared_plan_cache_evicts_oldest_shape(cluster):
+    """Overfill the structural plan-cache LRU: the OLDEST (least recently
+    used) shape is the one evicted, a hit refreshes recency, and an
+    evicted shape re-prepares as a fresh miss."""
+    cols = ["l_tax", "l_quantity", "l_discount", "l_extendedprice",
+            "l_shipdate", "l_orderkey"]
+    shapes = [_q6_variant(cols[:k]) for k in range(6)]
+    driver = TPCHDriver(sf=0.002, cluster=cluster, seed=0)
+    driver.IR_CACHE_MAX = 4
+    mreg = driver.obs.metrics
+
+    preps = [driver.prepare(s) for s in shapes[:5]]   # 5th insert evicts #0
+    assert len(driver._prepared) == 4
+    miss0 = mreg.value("plan_cache.miss")
+    again0 = driver.prepare(shapes[0])                # oldest: gone -> miss
+    assert mreg.value("plan_cache.miss") == miss0 + 1
+    assert again0.entry is not preps[0].entry
+    hit0 = mreg.value("plan_cache.hit")
+    assert driver.prepare(shapes[4]).entry is preps[4].entry  # newest: hit
+    assert mreg.value("plan_cache.hit") == hit0 + 1
+    # recency, not insertion order: after again0's insert evicted #1 and
+    # the hit refreshed #4, the oldest entry is #2 — the next overfill
+    # must drop IT while the refreshed #3/#4 survive
+    driver.prepare(shapes[5])
+    assert driver.prepare(shapes[3]).entry is preps[3].entry
+    m = mreg.value("plan_cache.miss")
+    assert driver.prepare(shapes[2]).entry is not preps[2].entry
+    assert mreg.value("plan_cache.miss") == m + 1
+
+
+def test_bound_closure_cache_evicts_oldest_binding(cluster):
+    """Overfill the per-shape bound-closure LRU: the oldest binding's
+    closure is dropped (rebuilt on re-request), the newest survives."""
+    driver = TPCHDriver(sf=0.002, cluster=cluster, seed=0)
+    driver.BOUND_CACHE_MAX = 3
+
+    def fn_for(q):
+        return driver.compile_query(
+            tq.q6_ir(dataclasses.replace(DP, q6_quantity=float(q))))
+
+    fns = [fn_for(q) for q in (20, 21, 22, 23)]       # 4th insert evicts 20
+    prep = driver.prepare(tq.q6_ir())
+    assert len(prep.entry.bound) == 3
+    assert fn_for(23) is fns[3], "newest binding must still be memoized"
+    assert fn_for(20) is not fns[0], "evicted binding must rebuild"
+    assert fn_for(21) is not fns[1], "20's rebuild evicted 21, next-oldest"
+    assert driver.compile_events == [], (
+        "closure churn must not touch the compiled executable")
+
+
 def test_batched_division_measure_stays_finite_and_correct(cluster):
     """A measure that divides can be non-finite on filtered-out rows; the
     batched lowering must not take the mask-GEMM shortcut there (0 * inf

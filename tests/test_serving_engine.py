@@ -1,0 +1,233 @@
+"""Serving tier under concurrency: the thread-safe driver caches, the
+continuous-batching engine, admission bounds, and the serving CLI.
+
+- concurrent ``prepare()``/``query()`` from threads: ONE compile per
+  shape/specialization, hit/miss counters that add up, identical answers
+  on every thread (the racing-first-trace and double-compile regressions),
+- engine coalescing: concurrent same-shape submissions stack into vmapped
+  batches whose per-lane answers are BIT-IDENTICAL to sequential
+  ``execute`` of the same bindings (q6: no float reassociation),
+- Tier-1 inline: cube-covered submissions answer synchronously and never
+  touch the batch path,
+- bounded admission: past ``max_queue`` the engine rejects with
+  :class:`AdmissionError` instead of queueing without limit,
+- power-of-two padding: odd batch sizes reuse the padded bucket's
+  executable instead of minting a new specialization per observed size,
+- the serving CLI validates ``--queries`` names up front (exit 2, names
+  listed) and the --cubes table survives a 0.0 trimmed-median Tier-1 time.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serve.olap_engine import AdmissionError, OLAPEngine
+from repro.tpch import queries as tq
+from repro.tpch.driver import TPCHDriver
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def serve_driver(cluster):
+    """Small cubed instance shared by the engine tests."""
+    d = TPCHDriver(sf=0.005, cluster=cluster, seed=0)
+    d.build_cubes()
+    return d
+
+
+def _off_edge_bindings(prep, n, seed=7):
+    """q6 bindings that MISS the cube router (so they queue and batch)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    while len(out) < n:
+        b = tq.random_binding("q6", rng)
+        if prep.answer_tier1(prep.binding(b)) is None:
+            out.append(b)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver thread safety
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_prepare_execute_single_compile(cluster):
+    """8 threads racing prepare()+execute() of one shape: one cache miss,
+    7 hits, exactly ONE XLA trace, and every thread gets the same bits."""
+    d = TPCHDriver(sf=0.002, cluster=cluster, seed=0)
+    n = 8
+    binding = tq.default_binding("q6")
+    barrier = threading.Barrier(n)
+    outs, errs = [None] * n, []
+
+    def worker(i):
+        try:
+            barrier.wait()
+            prep = d.prepare(tq.q6_param_ir())
+            outs[i] = np.asarray(prep.execute(binding).value)
+        except Exception as e:  # pragma: no cover - the failure we test for
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert d.compile_events == ["q6_param"], (
+        f"racing threads must share one trace, got {d.compile_events}")
+    assert d.obs.metrics.value("plan_cache.miss") == 1
+    assert d.obs.metrics.value("plan_cache.hit") == n - 1
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+def test_concurrent_query_threads_consistent_counters(cluster):
+    """query() end-to-end from 12 threads (same literal tree): counters
+    add up to the call count and the plan compiles once."""
+    d = TPCHDriver(sf=0.002, cluster=cluster, seed=0)
+    n = 12
+    barrier = threading.Barrier(n)
+    outs, errs = [None] * n, []
+
+    def worker(i):
+        try:
+            barrier.wait()
+            outs[i] = np.asarray(d.query(tq.q6_ir()).value)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    mreg = d.obs.metrics
+    assert (mreg.value("plan_cache.hit")
+            + mreg.value("plan_cache.miss")) == n
+    assert mreg.value("plan_cache.miss") == 1
+    assert len(d.compile_events) == 1
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+# ---------------------------------------------------------------------------
+# the continuous-batching engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_coalesced_batches_bit_identical_to_sequential(serve_driver):
+    d = serve_driver
+    prep = d.prepare(tq.q6_param_ir())
+    bindings = _off_edge_bindings(prep, 12)
+    expected = [np.asarray(prep.execute(b).value) for b in bindings]
+    mreg = d.obs.metrics
+    batches0 = mreg.value("serve.batches")
+    lanes0 = mreg.value("serve.coalesced_lanes")
+
+    async def go():
+        async with OLAPEngine(d, max_batch=8, max_wait_us=50000) as eng:
+            return await asyncio.gather(
+                *[eng.submit(prep, b) for b in bindings])
+
+    answers = asyncio.run(go())
+    for got, want in zip(answers, expected):
+        assert got.tier == 2
+        np.testing.assert_array_equal(np.asarray(got.value), want)
+    # all 12 queued before the window closed: sealed as 8 + 4, not 12 solos
+    assert mreg.value("serve.batches") - batches0 == 2
+    assert mreg.value("serve.coalesced_lanes") - lanes0 == 12
+
+
+def test_engine_tier1_inline_never_queued(serve_driver):
+    d = serve_driver
+    prep = next(p for p in (d.prepare(make())
+                            for make in tq.SERVING_QUERIES.values())
+                if p.answer_tier1(p.binding()) is not None)
+    mreg = d.obs.metrics
+    before = (mreg.value("serve.batches"), mreg.value("serve.solo"))
+
+    async def go():
+        async with OLAPEngine(d) as eng:
+            return await eng.submit(prep)
+
+    ans = asyncio.run(go())
+    assert ans.tier == 1
+    assert (mreg.value("serve.batches"), mreg.value("serve.solo")) == before
+
+
+def test_engine_admission_bound_rejects_past_max_queue(serve_driver):
+    d = serve_driver
+    prep = d.prepare(tq.q6_param_ir())
+    bindings = _off_edge_bindings(prep, 6, seed=11)
+
+    async def go():
+        async with OLAPEngine(d, max_batch=16, max_wait_us=50000,
+                              max_queue=3) as eng:
+            tasks = [asyncio.ensure_future(eng.submit(prep, b))
+                     for b in bindings]
+            return await asyncio.gather(*tasks, return_exceptions=True)
+
+    res = asyncio.run(go())
+    rejected = [r for r in res if isinstance(r, AdmissionError)]
+    served = [r for r in res if not isinstance(r, BaseException)]
+    assert len(rejected) == 3 and len(served) == 3
+    assert d.obs.metrics.value("serve.rejected") >= 3
+
+
+def test_engine_submit_when_stopped_rejected(serve_driver):
+    eng = OLAPEngine(serve_driver)
+    prep = serve_driver.prepare(tq.q6_param_ir())
+    with pytest.raises(AdmissionError, match="not running"):
+        asyncio.run(eng.submit(prep))
+
+
+def test_batch_padding_reuses_bucket_executable(serve_driver):
+    """Odd batch sizes pad to the power-of-two bucket: no per-size
+    specialization, padding lanes counted, outputs sliced to the real B."""
+    d = serve_driver
+    prep = d.prepare(tq.q6_param_ir())
+    bindings = _off_edge_bindings(prep, 3, seed=13)
+    expected = [np.asarray(prep.execute(b).value) for b in bindings]
+
+    first = prep.execute_batch(bindings, pad_to=4)      # may trace B=4 once
+    n_compiles = len(d.compile_events)
+    pads0 = d.obs.metrics.value("driver.batch_pad_lanes")
+    again = prep.execute_batch(bindings[:2], pad_to=4)  # MUST reuse it
+    assert len(d.compile_events) == n_compiles
+    assert d.obs.metrics.value("driver.batch_pad_lanes") - pads0 == 2
+    assert ("batch", 4) in prep.entry.warm
+    assert ("batch", 3) not in prep.entry.warm
+    assert ("batch", 2) not in prep.entry.warm
+    assert np.asarray(first.value).shape[0] == 3
+    assert np.asarray(again.value).shape[0] == 2
+    for lane, want in enumerate(expected):
+        np.testing.assert_array_equal(np.asarray(first.value)[lane], want)
+
+
+# ---------------------------------------------------------------------------
+# serving CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_unknown_query_names_exit_2(capsys):
+    from repro.launch import serve_olap
+
+    rc = serve_olap.main(["--queries", "q6", "nope", "q999", "--sf", "0.005"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "nope" in err and "q999" in err
+    assert "valid --queries names" in err and "q6" in err
+
+
+def test_cli_speedup_str_handles_zero_tier1_time():
+    from repro.launch.serve_olap import _speedup_str
+
+    assert _speedup_str(0.0, 0.0).strip() == "--"
+    assert _speedup_str(1.0, 0.0).strip() == "infx"   # underflowed median
+    assert _speedup_str(2.0, 1.0).strip() == "2x"

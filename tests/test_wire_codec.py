@@ -476,3 +476,58 @@ def test_choose_semijoin_wire_latency_mode():
     lossy_net = dataclasses.replace(wirecal.BUILTIN, msg_ms=1e9)
     assert compression.choose_semijoin_wire(
         64, 10_000_000, Pn, domain=10_000_000 // Pn, cal=lossy_net) == 2
+
+
+# ---------------------------------------------------------------------------
+# calibration-file loading: explicit overrides fail loudly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tier1
+def test_wirecal_explicit_env_missing_file_raises(monkeypatch, tmp_path):
+    """$REPRO_WIRE_CAL pointing at a missing file is a misconfiguration,
+    not an excuse to silently plan on builtin GbE rates."""
+    from repro.core import wirecal
+
+    monkeypatch.setenv(wirecal.ENV_VAR, str(tmp_path / "nope.json"))
+    with pytest.raises(wirecal.WireCalError, match=wirecal.ENV_VAR):
+        wirecal.load()
+
+
+@pytest.mark.tier1
+def test_wirecal_explicit_path_corrupt_file_raises(monkeypatch, tmp_path):
+    from repro.core import wirecal
+
+    monkeypatch.delenv(wirecal.ENV_VAR, raising=False)
+    bad = tmp_path / "cal.json"
+    bad.write_text("{broken")
+    with pytest.raises(wirecal.WireCalError, match="cal.json"):
+        wirecal.load(str(bad))
+    bad.write_text("[1, 2, 3]")     # valid JSON, not a calibration object
+    with pytest.raises(wirecal.WireCalError,
+                       match="not a calibration JSON object"):
+        wirecal.load(str(bad))
+
+
+@pytest.mark.tier1
+def test_wirecal_default_path_still_falls_back(monkeypatch, tmp_path):
+    """Only EXPLICIT sources are strict: an absent default-location file
+    means 'never calibrated' and keeps the deterministic builtin."""
+    from repro.core import wirecal
+
+    monkeypatch.delenv(wirecal.ENV_VAR, raising=False)
+    monkeypatch.chdir(tmp_path)     # default path is repo-relative
+    assert wirecal.load() is wirecal.BUILTIN
+
+
+@pytest.mark.tier1
+def test_wirecal_strict_override_for_calibrate_inherit(monkeypatch, tmp_path):
+    """calibrate --out into a not-yet-existing file is the normal fresh
+    flow: strict=False restores the tolerant fallback for that one path."""
+    from repro.core import wirecal
+
+    monkeypatch.delenv(wirecal.ENV_VAR, raising=False)
+    missing = tmp_path / "fresh.json"
+    assert wirecal.load(str(missing), strict=False) is wirecal.BUILTIN
+    with pytest.raises(wirecal.WireCalError):
+        wirecal.load(str(missing))
