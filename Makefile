@@ -33,13 +33,15 @@ bench-cubes:
 
 # tiny-scale smoke of the perf benchmarks (CI runs this and uploads the
 # JSON from experiments/bench/ as an artifact).  exchange_compression,
-# param_throughput, and serving_load are GATES (non-zero exit below 4x
-# bytes / 3x batched sweep throughput / 2x coalesced serving throughput
-# + 1.2x tier-1 tail bound, or on oracle/parity mismatch); ir_overhead is
-# a REPORT — its <5% latency target is too noisy to fail CI on shared
-# runners
+# param_throughput, serving_load, and compressed_scan are GATES (non-zero
+# exit below 4x wire bytes / 3x batched sweep throughput / 2x coalesced
+# serving throughput + 1.2x tier-1 tail bound / 4x scan-column residency
+# + 1.1x DRAM-bound packed-scan latency, or on oracle/parity mismatch);
+# ir_overhead is a REPORT — its <5% latency target is too noisy to fail
+# CI on shared runners
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.exchange_compression --sf 0.02 --repeat 5
 	PYTHONPATH=src python -m benchmarks.param_throughput --sf 0.02 --repeat 5
 	PYTHONPATH=src python -m benchmarks.ir_overhead --sf 0.02 --repeat 5
 	PYTHONPATH=src python -m benchmarks.serving_load --sf 0.02 --requests 256 --repeat 3
+	PYTHONPATH=src python -m benchmarks.compressed_scan --sf 0.02 --repeat 15

@@ -13,12 +13,178 @@ predicates run over dictionary positions, not raw strings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from typing import Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import compression
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedColumn:
+    """A bit-packed RESIDENT column: the execution format, not a wire
+    format.  Codes are frame-of-reference (``offset``) or dictionary
+    (``values``) positions packed at ``width`` bits into uint32 words.
+
+    The layout is per-node: each node's ``padded_rows`` (a multiple of 32)
+    values occupy exactly ``padded_rows * width / 32`` words, so the words
+    array shards over the nodes axis with a plain ``P(axis)`` spec and a
+    shard_map in_specs prefix broadcasts over the single ``words`` leaf.
+    ``shape`` mirrors the raw column's row count in both the global view
+    (host) and the local view (inside shard_map), which keeps row-count
+    probes like ``next(iter(cols.values())).shape[0]`` working unchanged.
+    """
+
+    words: jax.Array                      # uint32, (nodes_present * wpn,)
+    rows: int                             # valid rows per node
+    padded_rows: int                      # multiple of 32
+    width: int                            # bits per code, 1..30
+    offset: int = 0                       # frame-of-reference bias
+    values: Optional[tuple] = None        # sorted dictionary, or None (FOR)
+    dtype: str = "int32"                  # 'int32' | 'float32' | 'bool'
+    num_nodes: int = 1
+
+    def tree_flatten(self):
+        aux = (self.rows, self.padded_rows, self.width, self.offset,
+               self.values, self.dtype, self.num_nodes)
+        return (self.words,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    @property
+    def words_per_node(self) -> int:
+        return (self.padded_rows * self.width) // 32
+
+    @property
+    def nodes_present(self) -> int:
+        # global view: num_nodes * wpn words; local view (inside
+        # shard_map): wpn words -> 1
+        return self.words.shape[0] // max(self.words_per_node, 1)
+
+    @property
+    def shape(self) -> tuple:
+        return (self.nodes_present * self.rows,)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.words.shape[0]) * 4
+
+    @property
+    def raw_nbytes(self) -> int:
+        """Bytes the same rows would occupy in the raw resident format."""
+        itemsize = 1 if self.dtype == "bool" else 4
+        return self.nodes_present * self.rows * itemsize
+
+    def _from_codes(self, codes):
+        """uint32 codes -> the column's logical dtype."""
+        if self.values is not None:
+            table = jnp.asarray(np.asarray(self.values,
+                                           dtype=np.dtype(self.dtype)))
+            return table[codes.astype(jnp.int32)]
+        if self.dtype == "bool":
+            return codes.astype(bool)
+        out = codes.astype(jnp.int32) + jnp.int32(self.offset)
+        return out.astype(jnp.dtype(self.dtype))
+
+    def decode(self):
+        """Full decode to a dense array (global or local view)."""
+        wpn = self.words_per_node
+        nodes = self.nodes_present
+        w = self.words.reshape(nodes, wpn)
+        codes = jax.vmap(
+            lambda ww: compression.unpack_bits(ww, self.padded_rows,
+                                               self.width))(w)
+        return self._from_codes(codes[:, :self.rows].reshape(-1))
+
+    def gather(self, idx):
+        """Late materialization: decode ONLY the rows in ``idx`` (local
+        view — row indices are node-local)."""
+        codes = compression.gather_bits(self.words, idx, self.width)
+        return self._from_codes(codes)
+
+
+def _pad32(n: int) -> int:
+    return -(-n // 32) * 32
+
+
+def plan_packing(chunks: Sequence[np.ndarray],
+                 max_width: int = 24) -> Optional[dict]:
+    """Decide whether a column (given as per-node chunks) is
+    pack-eligible, and with what parameters.  Returns
+    ``{'width', 'offset', 'values', 'dtype'}`` or None (stay raw).
+
+    Eligible: bools (width 1); ints whose span fits ``max_width`` bits
+    (frame-of-reference); floats that are all-integral with a small span
+    (FOR on the integer codes) or low-cardinality (sorted dictionary).
+    """
+    arr = np.concatenate([np.asarray(c) for c in chunks])
+    if arr.size == 0:
+        return None
+    if arr.dtype == np.bool_:
+        return {"width": 1, "offset": 0, "values": None, "dtype": "bool"}
+    if np.issubdtype(arr.dtype, np.integer):
+        lo, hi = int(arr.min()), int(arr.max())
+        w = compression.required_width(hi - lo)
+        if w > max_width:
+            return None
+        return {"width": max(1, w), "offset": lo, "values": None,
+                "dtype": "int32"}
+    if np.issubdtype(arr.dtype, np.floating):
+        if not np.isfinite(arr).all():
+            return None
+        if (arr == np.floor(arr)).all():
+            lo, hi = int(arr.min()), int(arr.max())
+            w = compression.required_width(hi - lo)
+            if w <= max_width:
+                return {"width": max(1, w), "offset": lo, "values": None,
+                        "dtype": "float32"}
+        vals = np.unique(arr)
+        if vals.size <= 64:
+            w = compression.required_width(max(vals.size - 1, 0))
+            return {"width": max(1, w), "offset": 0,
+                    "values": tuple(float(v) for v in vals),
+                    "dtype": "float32"}
+    return None
+
+
+def pack_column(chunks: Sequence[np.ndarray], spec: dict) -> PackedColumn:
+    """Pack per-node chunks (equal length) into one PackedColumn with the
+    globally consistent ``spec`` from :func:`plan_packing`."""
+    rows = int(np.asarray(chunks[0]).shape[0])
+    padded = _pad32(rows)
+    width, offset, values = spec["width"], spec["offset"], spec["values"]
+    parts = []
+    for c in chunks:
+        a = np.asarray(c)
+        assert a.shape[0] == rows, "per-node chunks must be equal length"
+        if values is not None:
+            codes = np.searchsorted(np.asarray(values, a.dtype), a)
+        elif a.dtype == np.bool_:
+            codes = a.astype(np.uint32)
+        else:
+            codes = (a.astype(np.int64) - offset).astype(np.uint32)
+        if padded > rows:
+            codes = np.concatenate(
+                [codes, np.zeros(padded - rows, np.uint32)])
+        parts.append(np.asarray(
+            compression.pack_bits(jnp.asarray(codes, jnp.uint32), width)))
+    return PackedColumn(
+        words=jnp.asarray(np.concatenate(parts)),
+        rows=rows, padded_rows=padded, width=width, offset=offset,
+        values=values, dtype=spec["dtype"], num_nodes=len(chunks))
+
+
+def decode_columns(columns: Mapping) -> dict:
+    """Decode any PackedColumn entries to dense arrays (raw columns pass
+    through) — the compatibility shim for plans that consume raw arrays."""
+    return {n: (c.decode() if isinstance(c, PackedColumn) else c)
+            for n, c in columns.items()}
 
 
 @dataclasses.dataclass
@@ -64,7 +230,11 @@ def shard_table(table: Table, mesh: jax.sharding.Mesh, axis: str = "nodes") -> T
     cols = {}
     for name, col in table.columns.items():
         sharding = NamedSharding(mesh, spec if not table.replicated else P())
-        cols[name] = jax.device_put(jnp.asarray(col), sharding)
+        if isinstance(col, PackedColumn):
+            cols[name] = dataclasses.replace(
+                col, words=jax.device_put(jnp.asarray(col.words), sharding))
+        else:
+            cols[name] = jax.device_put(jnp.asarray(col), sharding)
     return Table(table.name, cols, table.dictionaries, table.replicated)
 
 
@@ -79,8 +249,14 @@ def concat_tables(parts: Sequence[Table]) -> Table:
     """Host-side concatenation of per-node chunks (used to build the
     unpartitioned oracle input)."""
     first = parts[0]
-    cols = {
-        n: np.concatenate([np.asarray(p.columns[n]) for p in parts], axis=0)
-        for n in first.columns
-    }
+    cols = {}
+    for n in first.columns:
+        vals = [p.columns[n] for p in parts]
+        if isinstance(vals[0], PackedColumn):
+            cols[n] = dataclasses.replace(
+                vals[0],
+                words=jnp.concatenate([v.words for v in vals]),
+                num_nodes=sum(v.num_nodes for v in vals))
+        else:
+            cols[n] = np.concatenate([np.asarray(v) for v in vals], axis=0)
     return Table(first.name, cols, first.dictionaries, first.replicated)

@@ -48,15 +48,25 @@ def packed_words(n: int, width: int) -> int:
     return (n * width + 31) // 32
 
 
+def _width_mask(width: int):
+    return jnp.uint32((1 << width) - 1 if width < 32 else 0xFFFFFFFF)
+
+
 def pack_bits(vals, width: int):
     """Pack ``vals`` (non-negative int32/uint32, < 2**width) into uint32
     words, little-endian bit order.  Values may straddle a word boundary;
     both halves are deposited with disjoint-bit scatters (adds of disjoint
     bits == or, which keeps this a pure vectorized gather/scatter — the
-    TPU-friendly reformulation of SIMD shuffles)."""
-    assert 1 <= width <= 32
+    TPU-friendly reformulation of SIMD shuffles).
+
+    ``width == 0`` is the constant-column degenerate: every value is 0
+    (after frame-of-reference subtraction) and the packed form is the
+    empty word array — it round-trips through :func:`unpack_bits`."""
+    assert 0 <= width <= 32
     n = vals.shape[0]
-    v = vals.astype(jnp.uint32) & jnp.uint32((1 << width) - 1 if width < 32 else 0xFFFFFFFF)
+    if width == 0:
+        return jnp.zeros(0, jnp.uint32)
+    v = vals.astype(jnp.uint32) & _width_mask(width)
     bitpos = jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(width)
     word = (bitpos >> 5).astype(jnp.int32)
     off = bitpos & jnp.uint32(31)
@@ -73,23 +83,36 @@ def pack_bits(vals, width: int):
     return words
 
 
-def unpack_bits(words, n: int, width: int):
-    """Inverse of pack_bits; returns uint32 array of length n."""
-    assert 1 <= width <= 32
-    bitpos = jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(width)
+def gather_bits(words, idx, width: int):
+    """Random-access extract: value at each row index ``idx`` of a
+    :func:`pack_bits` stream (the late-materialization primitive — decode
+    only the surviving rows, never the full column)."""
+    assert 0 <= width <= 32
+    if width == 0:
+        return jnp.zeros(idx.shape, jnp.uint32)
+    bitpos = idx.astype(jnp.uint32) * jnp.uint32(width)
     word = (bitpos >> 5).astype(jnp.int32)
     off = bitpos & jnp.uint32(31)
     nwords = words.shape[0]
     lo = words[word] >> off
     nxt = words[jnp.minimum(word + 1, nwords - 1)]
     hi = jnp.where(off > 0, nxt << (jnp.uint32(32) - jnp.where(off > 0, off, 1)), 0)
-    mask = jnp.uint32((1 << width) - 1 if width < 32 else 0xFFFFFFFF)
-    return (lo | hi) & mask
+    return (lo | hi) & _width_mask(width)
+
+
+def unpack_bits(words, n: int, width: int):
+    """Inverse of pack_bits; returns uint32 array of length n."""
+    assert 0 <= width <= 32
+    if width == 0:
+        return jnp.zeros(n, jnp.uint32)
+    return gather_bits(words, jnp.arange(n, dtype=jnp.uint32), width)
 
 
 def required_width(max_val: int) -> int:
-    """Smallest width that can represent max_val (host-side helper)."""
-    return max(1, int(max_val).bit_length())
+    """Smallest width that can represent max_val (host-side helper).
+    ``required_width(0) == 0``: a constant-zero column needs no bits —
+    width-0 columns round-trip through pack/unpack as empty word arrays."""
+    return int(max_val).bit_length()
 
 
 # ---------------------------------------------------------------------------

@@ -16,7 +16,7 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.columnar import Table, shard_table
+from repro.core.columnar import Table, decode_columns, shard_table
 from repro.core.exchange import WireFormat
 from repro.core.partitioning import RangePartitioning
 
@@ -118,10 +118,23 @@ class Cluster:
         if batch and not params:
             raise ValueError("batch=True requires a parameterized plan")
 
+        # compressed residency: tables may hold PackedColumn entries.  A
+        # plan that declares ``handles_packed`` (the IR lowering) receives
+        # them as-is and scans the packed words directly; every other plan
+        # (hand plans, cube builds) gets a full decode at plan entry —
+        # inside shard_map, so only the local shard is ever decoded.
+        if getattr(plan, "handles_packed", False):
+            def entry(columns):
+                return columns
+        else:
+            def entry(columns):
+                return {t: decode_columns(c) for t, c in columns.items()}
+
         if params:
             param_specs = {p.name: P() for p in params}
 
             def run(columns, pvals):
+                columns = entry(columns)
                 if batch:
                     return jax.vmap(lambda pv: plan(ctx, columns, pv))(pvals)
                 return plan(ctx, columns, pvals)
@@ -136,7 +149,7 @@ class Cluster:
             return jax.jit(sharded)
 
         def run(columns):
-            return plan(ctx, columns)
+            return plan(ctx, entry(columns))
 
         sharded = jax.shard_map(
             run,

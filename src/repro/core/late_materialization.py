@@ -28,11 +28,18 @@ def materialize(
     local_columns: dict name -> (rows_per_node,) local attribute shards.
     Returns dict name -> (k,) materialized values (replicated).
     """
+    from repro.core.columnar import PackedColumn
+
     mine = valid & (part.owner(keys) == lax.axis_index(axis))
     local_idx = jnp.where(mine, part.local_index(keys), 0)
     out = {}
     for name, col in local_columns.items():
-        vals = col[local_idx]
+        # compressed-resident attributes gather k codes and decode only
+        # those — the column itself is never expanded
+        if isinstance(col, PackedColumn):
+            vals = col.gather(local_idx)
+        else:
+            vals = col[local_idx]
         contrib = jnp.where(mine, vals, jnp.zeros_like(vals))
         out[name] = lax.psum(contrib, axis)
     return out

@@ -20,6 +20,7 @@ from repro.kernels import (
     topk_select,
     wire_codec,
 )
+from repro.kernels import scan_filter as scan_filter_kernel
 
 _FORCE_REF = os.environ.get("REPRO_NO_KERNELS", "0") == "1"
 _USE_KERNELS = not _FORCE_REF
@@ -142,6 +143,35 @@ def mask_fold(mask):
 
 def mask_unfold(words, *, n):
     return _mask_unfold(words, n=n, impl=_codec_impl())
+
+
+# ---------------------------------------------------------------------------
+# predicate-on-packed scan (compressed residency): code-space range test
+# over bit-packed resident words, emitting a validity bitset.  Same
+# dispatch discipline as the wire codec — the SWAR formulation is pure XLA
+# on CPU, a Pallas lane kernel on TPU, and ref.py decodes-then-compares.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "padded_rows", "width",
+                                             "negate", "impl"))
+def _scan_filter(words, lo, hi, *, rows, padded_rows, width, negate, impl):
+    if impl == "ref":
+        return ref.scan_filter(words, lo, hi, rows, padded_rows, width, negate)
+    if impl == "pallas":
+        return scan_filter_kernel.scan_filter_pallas(
+            words, lo, hi, rows=rows, padded_rows=padded_rows, width=width,
+            negate=negate, interpret=_interpret())
+    return scan_filter_kernel.scan_filter_xla(
+        words, lo, hi, rows=rows, padded_rows=padded_rows, width=width,
+        negate=negate)
+
+
+def scan_filter(words, lo, hi, *, rows, padded_rows, width, negate=False):
+    """Validity bitset of ``lo <= code <= hi`` (optionally negated) over a
+    packed word stream; rows past ``rows`` are invalid."""
+    return _scan_filter(words, lo, hi, rows=rows, padded_rows=padded_rows,
+                        width=width, negate=negate, impl=_codec_impl())
 
 
 # ---------------------------------------------------------------------------

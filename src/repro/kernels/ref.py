@@ -45,6 +45,18 @@ def predicate_bitset(column, value):
     return compression.pack_bitset(bits)
 
 
+def scan_filter(words, lo, hi, rows, padded_rows, width, negate=False):
+    """Decode-then-compare oracle for the predicate-on-packed kernel:
+    unpack the full column, apply the code-space range test, pack the
+    validity bitset (rows past ``rows`` are never valid)."""
+    codes = compression.unpack_bits(words, padded_rows, width).astype(jnp.int32)
+    ok = (codes >= jnp.asarray(lo, jnp.int32)) & (codes <= jnp.asarray(hi, jnp.int32))
+    if negate:
+        ok = jnp.logical_not(ok)
+    ok = jnp.logical_and(ok, jnp.arange(padded_rows) < rows)
+    return compression.pack_bitset(ok)
+
+
 def mbit_encode(q, m, group):
     K = q.shape[0]
     g = q.reshape(K // group, group)

@@ -143,11 +143,23 @@ class ExplainReport:
         for depth, row in enumerate(reversed(self.plan_rows)):
             pad = "  " * depth
             op = row["op"]
+            extra = []
             if op == "Scan":
                 body = f"Scan[{row['table']} rows={row['rows']}]"
+                pc = row.get("packed_cols")
+                if pc:
+                    body += f" packed={len(pc)} cols"
             elif op == "Filter":
                 body = (f"Filter[{fmt_expr(row['pred'])}] "
                         f"sel={row['sel']:.3g}")
+                for d in row.get("scans") or []:
+                    # one line per packed column the filter touches: the
+                    # roofline's packed-vs-decode choice and its predicted
+                    # per-node scan bytes (vs the raw-resident footprint)
+                    extra.append(
+                        pad + f"  scan {d.column}: {d.mode} w={d.width} "
+                        f"bytes={_fmt_bytes(d.scan_bytes)}/node "
+                        f"(raw {_fmt_bytes(d.raw_bytes)}) — {d.reason}")
             elif op == "Project":
                 body = f"Project[{', '.join(row['cols'])}]"
             elif op == "SemiJoin":
@@ -171,6 +183,7 @@ class ExplainReport:
             else:  # pragma: no cover — exhaustive over the algebra
                 body = op
             lines.append(pad + body)
+            lines.extend(extra)
         return lines
 
     def text(self) -> str:
@@ -222,6 +235,12 @@ class ExplainReport:
                         parts.append(f"{tag} mean {h['mean']:.3g} ms "
                                      f"(n={h['count']})")
                 lines.append("codec predicted/exchange: " + ", ".join(parts))
+            if obs.get("bytes_resident") or obs.get("bytes_scanned"):
+                lines.append(
+                    f"storage: resident "
+                    f"{_fmt_bytes(obs.get('bytes_resident') or 0)} | "
+                    f"scanned (cumulative) "
+                    f"{_fmt_bytes(obs.get('bytes_scanned') or 0)}")
             lines.append(
                 f"counters: exchange.overflow={obs['overflow_count']} "
                 f"plan.compile_events={obs['compile_events']} "

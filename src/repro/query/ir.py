@@ -586,12 +586,28 @@ class ColumnStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class PackedInfo:
+    """Resident encoding of a bit-packed column (``core.columnar.
+    PackedColumn``): what the lowering needs to rewrite predicates into
+    code space and to predict bytes scanned — width/offset for
+    frame-of-reference columns, the sorted ``values`` tuple for
+    dictionary columns."""
+
+    width: int
+    offset: int = 0
+    values: Optional[tuple] = None
+    dtype: str = "int32"
+
+
+@dataclasses.dataclass(frozen=True)
 class TableInfo:
     name: str
     columns: tuple
     replicated: bool
     num_rows: int
     stats: Mapping[str, ColumnStats] = dataclasses.field(default_factory=dict)
+    # packed-resident columns: name -> PackedInfo (empty = raw residency)
+    packed: Mapping[str, PackedInfo] = dataclasses.field(default_factory=dict)
 
 
 # TPC-H co-partitioned edges (solid edges of the paper's Fig. 1):
@@ -618,10 +634,15 @@ class Catalog:
 
 
 def build_catalog(tables: Mapping[str, object], *, num_nodes: int = 1,
-                  copartitioned: Optional[Mapping[str, tuple]] = None) -> Catalog:
+                  copartitioned: Optional[Mapping[str, tuple]] = None,
+                  packed: Optional[Mapping[str, Mapping[str, PackedInfo]]] = None,
+                  ) -> Catalog:
     """Catalog from host-side ``Table`` objects (the driver's
     ``self.tables``): column names, replication, and min/max/distinct
-    stats feeding the selectivity model."""
+    stats feeding the selectivity model.  ``packed`` optionally declares
+    the resident encoding per table/column (the driver derives it from
+    the packed resident tables) — the lowering and the SCAN001 verifier
+    rule key off it."""
     infos = {}
     for name, t in tables.items():
         stats = {}
@@ -643,6 +664,7 @@ def build_catalog(tables: Mapping[str, object], *, num_nodes: int = 1,
             replicated=bool(getattr(t, "replicated", False)),
             num_rows=int(t.num_rows),
             stats=stats,
+            packed=dict((packed or {}).get(name, {})),
         )
     return Catalog(
         tables=infos,

@@ -42,7 +42,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import aggregation, late_materialization, semijoin, topk
-from repro.core import wirecal
+from repro.core import compression, scancal, wirecal
+from repro.core.columnar import PackedColumn
 from repro.core.compression import choose_semijoin_wire
 from repro.core.exchange import WireFormat
 from repro.query import stats as qstats
@@ -63,6 +64,7 @@ from repro.query.ir import (
     SemiJoin,
     TopK,
     UnaryOp,
+    conjuncts,
     eval_expr,
     expr_columns,
     expr_params,
@@ -203,10 +205,46 @@ def _decide_semijoins(root, catalog: Catalog, query_name=None,
     return decisions
 
 
-# stable public entry point for the static verifier (repro.query.verify):
-# the same decision pass the lowering runs, usable without lowering
+def _decide_scans(root, catalog: Catalog, cal=None) -> dict:
+    """Per-Filter predicate-on-packed decisions over compressed-resident
+    base tables: each filter conjunct that is a ``col op scalar``
+    comparison against a packed column rewrites into a code-space range
+    test the scan kernel evaluates on the packed words directly
+    (``repro.query.stats.scan_rewrite``); the :mod:`repro.core.scancal`
+    roofline arbitrates packed vs decode per column.  Same-column range
+    tests fuse into one scan (``qstats.merge_scan_conjuncts``).  Returns
+    ``{id(filter): [(conjuncts_tuple, [ScanDecision, ...]), ...]}`` for
+    filters touching at least one packed column."""
+    if cal is None:
+        cal = scancal.load(strict=False)
+    decisions = {}
+    base = None
+    for node in _chain(root):
+        if isinstance(node, Scan):
+            base = node.table
+            continue
+        if isinstance(node, GroupAggByKey):
+            base = node.into
+            continue
+        if not isinstance(node, Filter):
+            continue
+        tinfo = catalog.table(base)
+        if not tinfo.packed:
+            continue
+        rows = tinfo.num_rows // max(catalog.num_nodes, 1)
+        per = [(conj, qstats.decide_scan_conjunct(conj, base, tinfo.packed,
+                                                  rows, cal=cal))
+               for conj in conjuncts(node.pred)]
+        if any(ds for _, ds in per):
+            decisions[id(node)] = qstats.merge_scan_conjuncts(per)
+    return decisions
+
+
+# stable public entry points for the static verifier (repro.query.verify):
+# the same decision passes the lowering runs, usable without lowering
 decide_semijoins = _decide_semijoins
 SemiJoinPlan = _SemiJoinPlan
+decide_scans = _decide_scans
 
 
 def explain_chain(query: Query, catalog: Catalog, *, wire: str = "packed",
@@ -222,20 +260,25 @@ def explain_chain(query: Query, catalog: Catalog, *, wire: str = "packed",
     decisions = _decide_semijoins(root, catalog, query_name=query.name,
                                   wire=wire, binding=binding, cal=cal,
                                   predict_cal=predict_cal)
+    scan_plans = _decide_scans(root, catalog)
     rows = []
     base, sel = None, 1.0
     for node in _chain(root):
         if isinstance(node, Scan):
             base, sel = node.table, 1.0
+            tinfo = catalog.table(node.table)
             rows.append({"op": "Scan", "table": node.table,
-                         "rows": catalog.table(node.table).num_rows})
+                         "rows": tinfo.num_rows,
+                         "packed_cols": sorted(tinfo.packed)})
             continue
         tinfo = catalog.table(base)
         if isinstance(node, Filter):
             s = qstats.estimate_selectivity(node.pred, tinfo.stats, binding)
             sel *= s
             rows.append({"op": "Filter", "pred": node.pred, "sel": s,
-                         "cum_sel": sel})
+                         "cum_sel": sel,
+                         "scans": [d for _, ds in scan_plans.get(id(node), [])
+                                   for d in ds]})
         elif isinstance(node, Project):
             rows.append({"op": "Project",
                          "cols": [n for n, _ in node.cols]})
@@ -322,6 +365,31 @@ def _kernel_filter(root: GroupAgg) -> tuple:
 # ---------------------------------------------------------------------------
 # trace-time stream evaluation
 # ---------------------------------------------------------------------------
+
+
+class _LazyCols(dict):
+    """Column view over a (possibly packed-resident) local partition.
+    Packed columns decode on first touch and the decoded view is cached,
+    so a column whose only consumer is the predicate-on-packed kernel is
+    NEVER expanded to raw — late materialization at filter granularity.
+    ``raw()`` exposes the undecoded resident form for gather/kernel
+    consumers."""
+
+    def __getitem__(self, name):
+        v = super().__getitem__(name)
+        if isinstance(v, PackedColumn):
+            v = v.decode()
+            super().__setitem__(name, v)
+        return v
+
+    def raw(self, name):
+        return super().__getitem__(name)
+
+
+def _col_at(col, idx):
+    """Rows ``idx`` of a local column — code-space gather + decode for
+    packed residents (touches O(len(idx)) words, not the column)."""
+    return col.gather(idx) if isinstance(col, PackedColumn) else col[idx]
 
 
 @dataclasses.dataclass
@@ -418,6 +486,7 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
 
     sj_plans = _decide_semijoins(root, catalog, query_name=query.name,
                                  wire=wire, binding=binding)
+    scan_plans = _decide_scans(root, catalog)
     if obs is not None:
         obs.event(
             "lower", cat="plan",
@@ -429,13 +498,41 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
 
     def _eval(node, ctx, t, pv) -> _Stream:
         if isinstance(node, Scan):
-            return _Stream(base=node.table, cols=dict(t[node.table]),
+            return _Stream(base=node.table, cols=_LazyCols(t[node.table]),
                            mask=None, overflow=False)
 
         s = _eval(node.child, ctx, t, pv)
 
         if isinstance(node, Filter):
-            s.and_mask(eval_expr(node.pred, s.cols, pv))
+            per = scan_plans.get(id(node))
+            if per is None:
+                s.and_mask(eval_expr(node.pred, s.cols, pv))
+                return s
+            from repro.kernels import ops
+
+            acc = None          # AND of per-column bitsets, in word space
+            acc_shape = None    # (rows, padded_rows) — same table, so same
+            for conjs, ds in per:
+                dec = next((d for d in ds if d.mode == "packed"
+                            and d.rewrite is not None), None)
+                col = (s.cols.raw(dec.rewrite.column)
+                       if dec is not None else None)
+                if isinstance(col, PackedColumn):
+                    # predicate-on-packed: code-space range test over the
+                    # resident words, no decode of the column at all
+                    lo, hi = dec.rewrite.bounds(pv)
+                    words = ops.scan_filter(
+                        col.words, lo, hi, rows=col.rows,
+                        padded_rows=col.padded_rows, width=col.width,
+                        negate=dec.rewrite.negate)
+                    acc = words if acc is None else acc & words
+                    acc_shape = (col.rows, col.padded_rows)
+                else:
+                    for conj in conjs:
+                        s.and_mask(eval_expr(conj, s.cols, pv))
+            if acc is not None:
+                rows, padded = acc_shape
+                s.and_mask(compression.unpack_bitset(acc, padded)[:rows])
             return s
 
         if isinstance(node, Project):
@@ -445,7 +542,7 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
 
         if isinstance(node, SemiJoin):
             plan = sj_plans[id(node)]
-            target_cols = t[node.table]
+            target_cols = _LazyCols(t[node.table])
             part = ctx.part(node.table)
             key = eval_expr(node.key, s.cols, pv)
             if plan.alt == "local":
@@ -460,7 +557,10 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
 
                 def pred_fn(local_idx, m, _cols=target_cols, _p=node.pred,
                             _need=needed, _pv=pv):
-                    view = {c: _cols[c][local_idx] for c in _need}
+                    # requested rows only: packed targets gather+decode
+                    # capacity-many codes instead of expanding the column
+                    view = {c: _col_at(_cols.raw(c), local_idx)
+                            for c in _need}
                     return eval_expr(_p, view, _pv) & m
 
                 mask = (s.mask if s.mask is not None
@@ -482,7 +582,7 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
             return s
 
         if isinstance(node, Exists):
-            inner = t[node.table]
+            inner = _LazyCols(t[node.table])
             bits = eval_expr(node.pred, inner, pv)
             rows = ctx.part(s.base).rows_per_node
             fk_local = _local_index(ctx, s.base, inner[node.key])
@@ -504,12 +604,10 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
                 if s.mask is not None:
                     v = jnp.where(s.mask, v, 0.0)
                 derived[a.name] = jnp.zeros(rows, jnp.float32).at[idx].add(v)
-            return _Stream(
-                base=node.into,
-                cols={**dict(t[node.into]), **derived},
-                mask=None,
-                overflow=s.overflow,
-            )
+            cols = _LazyCols(t[node.into])
+            cols.update(derived)
+            return _Stream(base=node.into, cols=cols, mask=None,
+                           overflow=s.overflow)
 
         raise LoweringError(f"cannot lower operator {type(node).__name__}")
 
@@ -595,9 +693,11 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
                "valid": winners.valid}
         own = [f for f in root.fetch if f.table is None]
         if own:
+            # hand materialize the RESIDENT form: packed fetch attributes
+            # stay packed and only the k winners are gathered + decoded
             attrs = late_materialization.materialize(
                 winners.keys, winners.valid, ctx.part(s.base),
-                {f.name: s.cols[f.name] for f in own}, axis=ctx.axis,
+                {f.name: s.cols.raw(f.name) for f in own}, axis=ctx.axis,
             )
             out.update(attrs)
         for f in root.fetch:
@@ -634,4 +734,12 @@ def lower(query: Query, catalog: Catalog, *, wire: str = "packed",
     # the static semi-join decisions, in chain order (observability /
     # EXPLAIN attribute per-exchange collective bytes against these)
     plan.semijoins = tuple(sj_plans.values())
+    # per-column scan strategies (chain order) — the driver's
+    # storage.bytes_scanned accounting and EXPLAIN read these
+    plan.scans = tuple(d for per in scan_plans.values()
+                       for _, ds in per for d in ds)
+    # lowered plans consume packed-resident columns directly (lazy decode,
+    # predicate-on-packed, gather-based late materialization) — the engine
+    # must NOT expand them at entry
+    plan.handles_packed = True
     return plan

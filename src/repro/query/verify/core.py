@@ -196,6 +196,13 @@ register_rule(
     "A semi-join key column has float (n_distinct=0) catalog stats; "
     "Elias-Fano key packing and owner routing assume integral keys.")
 register_rule(
+    "SCAN001", WARN, "Packed column scanned outside code space",
+    "A filter references a compressed-resident (packed) column with a "
+    "predicate that cannot be rewritten into a code-space range test "
+    "(column-vs-column, arithmetic on the column, non-comparison shape); "
+    "the column is fully decoded before the predicate runs, forfeiting "
+    "the predicate-on-packed bandwidth savings.")
+register_rule(
     "WIRE001", INFO, "Forced packed wire predicted slower than raw",
     "The wire= override forces the packed codec on a request exchange, "
     "but the supplied machine calibration's roofline model predicts the "

@@ -20,6 +20,7 @@ from repro.query.lower import (
     ONEHOT_MAX_GROUPS,
     _chain,
     _has_division,
+    decide_scans,
     decide_semijoins,
 )
 from repro.query.ir import (
@@ -603,6 +604,38 @@ def check_wire_choice(ctx: VerifyContext):
     return out
 
 
+# ---------------------------------------------------------------------------
+# analyzer 7: compressed-residency scan audit (SCAN001)
+# ---------------------------------------------------------------------------
+
+
+def check_scan(ctx: VerifyContext):
+    """SCAN001: a filter over a packed base-table column whose shape the
+    code-space rewrite (``repro.query.stats.scan_rewrite``) cannot serve —
+    column-vs-column, arithmetic on the column, non-comparison — forces a
+    full decode of the compressed column before the predicate runs.  Only
+    Filter conjuncts over the scan stream are in scope: semi-join/exists
+    TARGET predicates evaluate on the probe path, not the scan kernel, so
+    they decode by design and are not reported."""
+    out = []
+    for per in decide_scans(ctx.query.root, ctx.catalog).values():
+        for conj, ds in per:
+            for d in ds:
+                if d.rewritable:
+                    continue
+                out.append(make_diagnostic(
+                    "SCAN001",
+                    f"filter conjunct over packed column {d.column!r} of "
+                    f"{d.table!r} (width {d.width}) is not rewritable into "
+                    f"a code-space range test; the scan decodes the full "
+                    f"column ({d.scan_bytes} B/node instead of a packed "
+                    f"scan) — restructure the predicate as "
+                    f"<col> <op> <scalar> to keep it on packed words",
+                    query=ctx.name, site=f"scan[{d.table}.{d.column}]",
+                    table=d.table, column=d.column, width=d.width))
+    return out
+
+
 ANALYZERS = (
     check_collectives,
     check_capacity,
@@ -610,6 +643,7 @@ ANALYZERS = (
     check_numeric,
     check_param_ranges,
     check_wire_choice,
+    check_scan,
 )
 
 

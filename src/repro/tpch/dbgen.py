@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.columnar import Table, concat_tables
+from repro.core.columnar import Table, concat_tables, pack_column, plan_packing
 from repro.tpch import schema as S
 
 
@@ -209,16 +209,36 @@ DICTIONARIES = {
 }
 
 
-def generate(sf: float, num_nodes: int, seed: int = 0) -> dict:
+def generate(sf: float, num_nodes: int, seed: int = 0,
+             storage: str = "raw") -> dict:
     """Global tables assembled from per-node chunks (host-side; used by the
-    driver to place data and by the oracle for correctness checks)."""
+    driver to place data and by the oracle for correctness checks).
+
+    ``storage="packed"`` generates eligible columns straight into the
+    compressed-resident :class:`~repro.core.columnar.PackedColumn` format
+    (dictionary / frame-of-reference bit-packing, globally consistent
+    width/offset/dictionary across node chunks) — the raw global column is
+    never materialized.  Ineligible columns (wide key spans, high-entropy
+    floats) stay raw; replicated tables always stay raw."""
+    if storage not in ("raw", "packed"):
+        raise ValueError(f"storage must be 'raw' or 'packed', got {storage!r}")
     chunks = [generate_node(sf, node, num_nodes, seed) for node in range(num_nodes)]
     tables = {}
     for name in ("supplier", "customer", "part", "partsupp", "orders", "lineitem"):
-        parts = [
-            Table(name, chunks[n][name], DICTIONARIES.get(name, {}))
-            for n in range(num_nodes)
-        ]
-        tables[name] = concat_tables(parts)
+        if storage == "packed":
+            cols = {}
+            for cname in chunks[0][name]:
+                cchunks = [chunks[n][name][cname] for n in range(num_nodes)]
+                spec = plan_packing(cchunks)
+                cols[cname] = (pack_column(cchunks, spec)
+                               if spec is not None
+                               else np.concatenate(cchunks))
+            tables[name] = Table(name, cols, DICTIONARIES.get(name, {}))
+        else:
+            parts = [
+                Table(name, chunks[n][name], DICTIONARIES.get(name, {}))
+                for n in range(num_nodes)
+            ]
+            tables[name] = concat_tables(parts)
     tables.update(_replicated_tables())
     return tables

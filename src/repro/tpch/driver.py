@@ -32,6 +32,7 @@ surfaces any binding that exceeds them.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from typing import Mapping, Optional
@@ -43,6 +44,8 @@ import numpy as np
 from repro.core import Cluster, Table
 from repro.core import plans as plan_registry
 from repro.core import wirecal
+from repro.core.columnar import PackedColumn
+from repro.query.ir import PackedInfo
 from repro.cube import CubeRouter, build_cube
 from repro.obs import (
     ExplainReport,
@@ -66,6 +69,26 @@ from repro.query import (
 )
 from repro.tpch import capacities as tpch_capacities
 from repro.tpch import dbgen, reference
+
+
+class ResidentBudgetError(MemoryError):
+    """The resident dataset exceeds the node memory budget
+    (``REPRO_RESIDENT_BUDGET_BYTES`` / ``resident_budget=``) — the cluster
+    cannot hold this scale factor in the chosen storage format.  The
+    message reports both formats' footprints; switching to
+    ``storage="packed"`` is the usual fix."""
+
+
+def _resident_bytes(table: Table) -> int:
+    """Resident footprint of one table (packed columns at their packed
+    size, raw columns at array size)."""
+    return sum(int(c.nbytes) for c in table.columns.values())
+
+
+def _raw_bytes(table: Table) -> int:
+    """What the same table would occupy fully decoded."""
+    return sum(int(c.raw_nbytes) if isinstance(c, PackedColumn)
+               else int(c.nbytes) for c in table.columns.values())
 
 
 @dataclasses.dataclass
@@ -119,6 +142,7 @@ class _PlanEntry:
         self.bound = {}         # binding signature -> fn(columns) closure
         self.route = (None, None)  # (router identity, Match|None) memo
         self.semijoins = ()     # static semi-join decisions of the lowering
+        self.scans = ()         # static per-column scan strategies
         self.profile = None     # lazy HLO CollectiveStats (explain_analyze)
         self.lock = threading.Lock()  # guards lazy compile + first trace
         self.warm = set()       # specializations already traced once
@@ -264,6 +288,7 @@ class PreparedQuery:
             value = out["value"] if set(out) == {"value"} else out
             sp.set(tier=2, route=self.source, overflow=overflow)
             mreg.counter("driver.tier2").inc()
+            self.driver._count_scan_bytes(self.entry)
             if overflow:
                 mreg.counter("exchange.overflow").inc()
             mreg.histogram("query.tier2_us").record(
@@ -339,6 +364,7 @@ class PreparedQuery:
             sp.set(tier=2, overflow_lanes=n_ovf)
             mreg.counter("driver.batch").inc()
             mreg.counter("driver.batch_lanes").inc(B)
+            self.driver._count_scan_bytes(self.entry, lanes=B)
             if n_ovf:
                 mreg.counter("exchange.overflow").inc(n_ovf)
             return QueryAnswer(value, tier=2, source=self.source,
@@ -348,12 +374,14 @@ class PreparedQuery:
 class TPCHDriver:
     def __init__(self, sf: float, cluster: Cluster | None = None, seed: int = 0,
                  capacities=None, backend: str = "xla", wire: str = "packed",
-                 obs: Observer | None = None):
+                 obs: Observer | None = None, storage: str = "packed",
+                 resident_budget: Optional[int] = None):
         self.cluster = cluster or Cluster()
         self.sf = sf
         self.seed = seed
         self.backend = backend
         self.wire = wire
+        self.storage = storage
         # machine calibration for EXPLAIN's roofline predictions (persisted
         # by `python -m repro.core.wirecal`; builtin defaults otherwise)
         self.wire_cal = wirecal.load()
@@ -364,12 +392,60 @@ class TPCHDriver:
         # §3.2.2-derived capacities for the hand plans; explicit overrides win
         self.capacities = tpch_capacities.derive(sf, self.cluster.num_nodes)
         self.capacities.update(capacities or {})
-        self.tables = dbgen.generate(sf, self.cluster.num_nodes, seed)
+        # resident storage format: "packed" generates eligible columns
+        # straight into the compressed PackedColumn form; self.tables stays
+        # a DECODED host-side view (bit-identical to the packed codes) for
+        # the oracle and catalog stats, while self.resident is what the
+        # cluster actually holds and places
+        self.resident = dbgen.generate(sf, self.cluster.num_nodes, seed,
+                                       storage=storage)
+        if storage == "packed":
+            self.tables = {
+                n: Table(n, {c: (np.asarray(col.decode())
+                                 if isinstance(col, PackedColumn) else col)
+                             for c, col in t.columns.items()},
+                         t.dictionaries, t.replicated)
+                for n, t in self.resident.items()
+            }
+        else:
+            self.tables = self.resident
         # pad the supplier key space so §3.2.5 groups divide evenly
         self._extend_derived_tables()
+        for extra in set(self.tables) - set(self.resident):
+            self.resident[extra] = self.tables[extra]
+        packed_meta = {
+            n: {c: PackedInfo(width=col.width, offset=col.offset,
+                              values=col.values, dtype=col.dtype)
+                for c, col in t.columns.items()
+                if isinstance(col, PackedColumn)}
+            for n, t in self.resident.items()
+        }
         self.catalog = build_catalog(self.tables,
-                                     num_nodes=self.cluster.num_nodes)
-        self.placed = {n: self.cluster.load(t) for n, t in self.tables.items()}
+                                     num_nodes=self.cluster.num_nodes,
+                                     packed=packed_meta)
+        # resident-footprint accounting + node memory budget: the budget
+        # models per-node main memory; exceeding it is the OOM the packed
+        # format exists to push out by ~the compression ratio
+        if resident_budget is None:
+            env = os.environ.get("REPRO_RESIDENT_BUDGET_BYTES")
+            resident_budget = int(env) if env else None
+        mreg = self.obs.metrics
+        total = 0
+        for n, t in self.resident.items():
+            b = _resident_bytes(t)
+            total += b
+            mreg.gauge(f"storage.bytes_resident.{n}").set(b)
+        mreg.gauge("storage.bytes_resident").set(total)
+        self.resident_bytes = total
+        if resident_budget is not None and total > resident_budget:
+            raw = sum(_raw_bytes(t) for t in self.resident.values())
+            raise ResidentBudgetError(
+                f"resident dataset at sf={sf} needs {total} bytes in "
+                f"{storage!r} storage but the node budget is "
+                f"{resident_budget} bytes (fully decoded it would be "
+                f"{raw}); use storage='packed' or a smaller scale factor")
+        self.placed = {n: self.cluster.load(t)
+                       for n, t in self.resident.items()}
         self.ctx = self.cluster.context(
             self.placed, self.capacities, backend=backend, scale_factor=sf,
             wire=wire,
@@ -416,6 +492,21 @@ class TPCHDriver:
 
     def _columns(self):
         return {n: t.columns for n, t in self.placed.items()}
+
+    def _count_scan_bytes(self, entry: _PlanEntry, lanes: int = 1) -> None:
+        """Account one execution's predicted scan traffic against the
+        ``storage.bytes_scanned`` counters (cluster-wide bytes: per-node
+        prediction x nodes x batch lanes)."""
+        if not entry.scans:
+            return
+        mreg = self.obs.metrics
+        nn = max(self.cluster.num_nodes, 1)
+        total = 0
+        for d in entry.scans:
+            b = d.scan_bytes * nn * lanes
+            mreg.counter(f"storage.bytes_scanned.{d.table}").inc(b)
+            total += b
+        mreg.counter("storage.bytes_scanned").inc(total)
 
     def _guarded_call(self, entry, key, fn, *args):
         """Run one device dispatch of ``entry``'s specialization ``key``.
@@ -526,6 +617,7 @@ class TPCHDriver:
                      binding=entry.stats_binding, batched=batched,
                      obs=self.obs)
         entry.semijoins = tuple(getattr(plan, "semijoins", ()))
+        entry.scans = tuple(getattr(plan, "scans", ()))
         events = self.compile_events
         obs = self.obs
         drv = self
@@ -772,6 +864,8 @@ class TPCHDriver:
         # report reflects what the measured runs did
         observed["overflow_count"] = mreg.value("exchange.overflow")
         observed["compile_events"] = mreg.value("plan.compile_events")
+        observed["bytes_scanned"] = mreg.value("storage.bytes_scanned")
+        observed["bytes_resident"] = mreg.value("storage.bytes_resident")
         # trace-time codec predictions accumulated by the exchange layer
         # (one record per compiled exchange specialization)
         for hname in ("exchange.encode_ms", "exchange.decode_ms"):

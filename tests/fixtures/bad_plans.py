@@ -16,7 +16,9 @@ import dataclasses
 
 from repro.core.wirecal import WireCalibration
 from repro.launch.roofline import CollectiveInstr
-from repro.query.ir import Catalog, ColumnStats, Lit, Param, Q, TableInfo, C
+from repro.query.ir import (
+    Catalog, ColumnStats, Lit, PackedInfo, Param, Q, TableInfo, C,
+)
 from repro.query.verify import CollectiveOp, PlanArtifacts
 
 
@@ -30,9 +32,12 @@ class BadPlan:
 
 
 def make_catalog(num_nodes: int = 8, fact_rows: int = 64000,
-                 dim_rows: int = 8000, fact_key_hi: float = None) -> Catalog:
+                 dim_rows: int = 8000, fact_key_hi: float = None,
+                 packed: bool = False) -> Catalog:
     """Synthetic star-schema catalog.  ``fact_key_hi`` widens the foreign
-    key's stats beyond the dimension's key space (the NUM003 hazard)."""
+    key's stats beyond the dimension's key space (the NUM003 hazard);
+    ``packed`` declares ``f_x`` compressed-resident (7-bit FOR codes),
+    arming the SCAN001 packed-scan analyzer."""
     if fact_key_hi is None:
         fact_key_hi = dim_rows - 1
     fact_stats = {
@@ -48,11 +53,15 @@ def make_catalog(num_nodes: int = 8, fact_rows: int = 64000,
         "d_key": ColumnStats(0, dim_rows - 1, dim_rows),
         "d_flag": ColumnStats(0, 2, 3),
     }
+    fact_packed = {}
+    if packed:
+        # f_x resides bit-packed: FOR codes 0..99 at width 7, offset 1
+        fact_packed = {"f_x": PackedInfo(width=7, offset=1)}
     return Catalog(
         tables={
             "fact": TableInfo(name="fact", columns=tuple(fact_stats) + ("f_tag",),
                               replicated=False, num_rows=fact_rows,
-                              stats=fact_stats),
+                              stats=fact_stats, packed=fact_packed),
             "dim": TableInfo(name="dim", columns=tuple(dim_stats),
                              replicated=False, num_rows=dim_rows,
                              stats=dim_stats),
@@ -217,6 +226,18 @@ BAD_PLANS = (
         kwargs=dict(calibration=WireCalibration(
             encode_gbps=0.001, decode_gbps=0.001,
             link_gbps=100.0, msg_ms=0.0, source="fixture")),
+    ),
+    # -- SCAN: predicate-on-packed audit --------------------------------------
+    BadPlan(
+        name="packed_predicate_outside_code_space",
+        expected_rule="SCAN001",
+        query=(Q.scan("fact")
+               # col-vs-col comparison: no code-space rewrite exists, so
+               # the packed f_x column decodes in full before the filter
+               .filter(C("f_x") < C("f_g"))
+               .group_agg(aggs=[("total", "sum", C("f_a"))])
+               .named("bad_packed_scan")),
+        catalog=make_catalog(packed=True),
     ),
     BadPlan(
         name="float_semijoin_key",
